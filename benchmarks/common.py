@@ -1,0 +1,66 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    """Median wall time of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def bench_sizes(scale: str):
+    """Benchmark corpus sizing: quick (default CI) vs paper (TS1/TS2).
+
+    Topic-mixture hardness (n_topics, alpha, noise) is tuned so ground-truth
+    neighbours straddle cluster boundaries — the paper's mid-recall regime
+    (their Table-2 recalls are 3-8/10), not a toy where any index saturates.
+    """
+    common = {"n_topics": 200, "topic_mix_alpha": 1.0,
+              "noise_terms": (4, 2, 24)}
+    if scale == "quick":
+        return {"n_docs": 12_000, "n_queries": 100, "k_clusters": 110,
+                "field_dims": (256, 256, 512),
+                "vocab_sizes": (4000, 6000, 15000), **common}
+    if scale == "ts1":
+        return {"n_docs": 53_722, "n_queries": 250, "k_clusters": 500,
+                "field_dims": (1024, 1024, 2048),
+                "vocab_sizes": (8000, 12000, 30000), **common}
+    if scale == "ts2":
+        return {"n_docs": 100_000, "n_queries": 250, "k_clusters": 1000,
+                "field_dims": (1024, 1024, 2048),
+                "vocab_sizes": (8000, 12000, 30000), **common}
+    raise ValueError(scale)
+
+
+# The paper's 7 weight sets (Table 2) — title/authors/abstract.
+PAPER_WEIGHT_SETS = (
+    ("equal", (1 / 3, 1 / 3, 1 / 3)),
+    ("0.4-0.4-0.2", (0.4, 0.4, 0.2)),
+    ("0.2-0.4-0.4", (0.2, 0.4, 0.4)),
+    ("0.4-0.2-0.4", (0.4, 0.2, 0.4)),
+    ("0.2-0.6-0.2", (0.2, 0.6, 0.2)),
+    ("0.6-0.2-0.2", (0.6, 0.2, 0.2)),
+    ("0.2-0.2-0.6", (0.2, 0.2, 0.6)),
+)
+
+
+def std_parser(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--scale", default="quick", choices=["quick", "ts1", "ts2"])
+    ap.add_argument("--seed", type=int, default=0)
+    return ap

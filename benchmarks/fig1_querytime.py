@@ -1,0 +1,69 @@
+"""Paper Fig 1: average query time vs number of visited clusters.
+
+The paper's claim: their scheme answers queries ~2x faster than CellDec at
+equal visited-cluster budgets (fewer, sparser distance computations); we
+additionally report the distance-computation count (hardware-independent
+cost, the paper's own accounting) next to wall time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CellDecIndex, ClusterPruneIndex, weighted_query
+from repro.data import CorpusConfig, make_corpus
+
+from .common import bench_sizes, std_parser, timed
+
+K_NN = 10
+
+
+def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
+    sz = bench_sizes(scale)
+    docs_np, spec, _ = make_corpus(CorpusConfig(
+        n_docs=sz["n_docs"], field_dims=sz["field_dims"],
+        vocab_sizes=sz["vocab_sizes"], n_topics=sz["n_topics"],
+        topic_mix_alpha=sz["topic_mix_alpha"],
+        noise_terms=sz["noise_terms"], seed=seed,
+    ))
+    docs = jnp.asarray(docs_np)
+    kc = sz["k_clusters"]
+    key = jax.random.PRNGKey(seed)
+
+    ours = ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
+                                   method="fpf", key=key)
+    celldec = CellDecIndex.build(docs, spec, kc, method="kmeans", iters=10,
+                                 key=key)
+
+    rng = np.random.default_rng(seed)
+    nq = min(64, sz["n_queries"])
+    qids = jnp.asarray(rng.choice(sz["n_docs"], nq, replace=False), jnp.int32)
+    queries = docs[qids]
+    wv = jnp.tile(jnp.asarray([0.6, 0.2, 0.2], jnp.float32)[None], (nq, 1))
+    qw = weighted_query(queries, wv, spec)
+
+    print(f"\n# Fig 1 — query time vs visited clusters (n={sz['n_docs']}, "
+          f"{nq} queries)")
+    print("probes,algo,ms_per_query,distance_computations_per_query")
+    out = {}
+    for probes in probe_grid:
+        t_our, (s, i, ns) = timed(
+            lambda p=probes: ours.search(qw, probes=p, k=K_NN, exclude=qids)
+        )
+        dc_our = float(jnp.mean(ns))
+        t_cd, (s2, i2, ns2) = timed(
+            lambda p=probes: celldec.search_weighted(
+                queries, wv, probes=p, k=K_NN, exclude=qids)
+        )
+        dc_cd = float(jnp.mean(jnp.asarray(ns2, jnp.float32)))
+        print(f"{probes},our,{t_our / nq * 1e3:.3f},{dc_our:.0f}")
+        print(f"{probes},celldec,{t_cd / nq * 1e3:.3f},{dc_cd:.0f}")
+        out[probes] = (t_our / nq, dc_our, t_cd / nq, dc_cd)
+    return out
+
+
+if __name__ == "__main__":
+    args = std_parser(__doc__).parse_args()
+    run(args.scale, args.seed)

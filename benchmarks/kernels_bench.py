@@ -1,0 +1,78 @@
+"""Kernel benches: Pallas (interpret on CPU; compiled on TPU) vs jnp oracle.
+
+On this CPU container interpret-mode wall time is NOT indicative of TPU
+performance — the meaningful outputs are (a) allclose vs the oracle at every
+shape, (b) the VMEM working-set accounting per BlockSpec (printed), which is
+the quantity that determines TPU block residency.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    bucket_score, bucket_score_ref, embed_bag, embed_bag_ref, fpf_iter,
+    fpf_iter_ref, topk_score, topk_score_ref,
+)
+
+from .common import timed
+
+
+def _vmem_mb(*arrs):
+    return sum(a.size * a.dtype.itemsize for a in arrs) / 2**20
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    print("\n# Kernels — oracle agreement + VMEM working set")
+    print("kernel,shape,allclose,vmem_block_MB,oracle_ms")
+
+    # topk_score: serving-scale brute scoring
+    q = jax.random.normal(key, (64, 1024))
+    d = jax.random.normal(key, (16384, 1024))
+    s, i = topk_score(q, d, k=10, block_q=64, block_n=512)
+    rs_, ri = topk_score_ref(q, d, 10)
+    t_ref, _ = timed(lambda: topk_score_ref(q, d, 10))
+    ok = np.allclose(np.asarray(s), np.asarray(rs_), atol=1e-4)
+    vmem = _vmem_mb(q[:64], d[:512]) + 64 * (10 + 512) * 4 / 2**20
+    print(f"topk_score,(64x16384x1024 k=10),{ok},{vmem:.1f},{t_ref*1e3:.1f}")
+
+    # bucket_score: cluster-prune inner loop
+    K, B, D, P = 64, 128, 1024, 6
+    bd = jax.random.normal(key, (K, B, D))
+    bi = jnp.arange(K * B, dtype=jnp.int32).reshape(K, B)
+    qs = jax.random.normal(key, (8, D))
+    probes = jax.random.randint(key, (8, P), 0, K)
+    s, i = bucket_score(qs, bd, bi, probes, k=10)
+    rs_, ri = bucket_score_ref(qs, bd, bi, probes, 10)
+    t_ref, _ = timed(lambda: bucket_score_ref(qs, bd, bi, probes, 10))
+    ok = np.allclose(np.asarray(s), np.asarray(rs_), atol=1e-4)
+    vmem = _vmem_mb(bd[0], qs[:1]) + (10 + B) * 2 * 4 / 2**20
+    print(f"bucket_score,({K}x{B}x{D} P={P}),{ok},{vmem:.1f},{t_ref*1e3:.1f}")
+
+    # fpf_iter: preprocessing round
+    x = jax.random.normal(key, (16384, 512))
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    ms = jnp.full((16384,), -jnp.inf)
+    nm, idx, val = fpf_iter(x, x[0], ms, block_m=1024)
+    rm, ridx, _ = fpf_iter_ref(x, x[0], ms)
+    t_ref, _ = timed(lambda: fpf_iter_ref(x, x[0], ms))
+    ok = np.allclose(np.asarray(nm), np.asarray(rm), atol=1e-5) and int(idx) == int(ridx)
+    vmem = _vmem_mb(x[:1024]) + 1024 * 2 * 4 / 2**20
+    print(f"fpf_iter,(16384x512),{ok},{vmem:.1f},{t_ref*1e3:.1f}")
+
+    # embed_bag: recsys lookup
+    tbl = jax.random.normal(key, (100_000, 128))
+    idxs = jax.random.randint(key, (256, 16), -1, 100_000)
+    o = embed_bag(tbl, idxs, combiner="sum")
+    r = embed_bag_ref(tbl, idxs, combiner="sum")
+    t_ref, _ = timed(lambda: embed_bag_ref(tbl, idxs, combiner="sum"))
+    ok = np.allclose(np.asarray(o), np.asarray(r), atol=1e-4)
+    vmem = (128 * 4 * 2) / 2**20
+    print(f"embed_bag,(100000x128 B=256 L=16),{ok},{vmem:.3f},{t_ref*1e3:.1f}")
+
+
+if __name__ == "__main__":
+    run()

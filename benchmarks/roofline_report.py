@@ -1,0 +1,65 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Prints the §Roofline table: per (arch x shape x mesh) the three terms,
+the dominant bottleneck, MODEL_FLOPS/HLO ratio, and per-device memory.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(out_dir: str = "results/dryrun", mesh: str | None = None):
+    rows = load(out_dir)
+    if not rows:
+        print(f"# no dry-run artifacts under {out_dir} — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    rows = [r for r in rows if mesh is None or r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("\n# Roofline — per (arch x shape x mesh), terms in seconds/step")
+    print("arch,shape,mesh,kind,t_compute,t_memory,t_collective,bottleneck,"
+          "roofline_frac,useful_flops_ratio,temp_GiB_per_dev")
+    for r in rows:
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 2**30
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+            f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+            f"{r['t_collective_s']:.3e},{r['bottleneck']},"
+            f"{r['roofline_fraction']:.3f},"
+            f"{r.get('useful_flops_ratio', float('nan')):.3f},{temp:.2f}"
+        )
+    # summary: worst roofline fraction + most collective-bound
+    def frac(r):
+        return r["roofline_fraction"]
+
+    worst = min(rows, key=frac)
+    coll = max(rows, key=lambda r: r["t_collective_s"] /
+               max(r["t_compute_s"] + r["t_memory_s"] + r["t_collective_s"],
+                   1e-30))
+    print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']} "
+          f"[{worst['mesh']}] frac={frac(worst):.4f}")
+    print(f"# most collective-bound: {coll['arch']}/{coll['shape']} "
+          f"[{coll['mesh']}] t_coll={coll['t_collective_s']:.3e}s")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    run(args.out, args.mesh)

@@ -1,0 +1,36 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale quick|ts1|ts2]
+
+table1  preprocessing time/space (FPF vs k-means CellDec vs PODS07)
+fig1    query time + distance computations vs visited clusters
+table2  recall + NAG over the paper's 7 weight sets
+kernels Pallas-vs-oracle agreement + VMEM working sets
+roofline the dry-run roofline table (requires results/dryrun/)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    scale = "quick"
+    if "--scale" in sys.argv:
+        scale = sys.argv[sys.argv.index("--scale") + 1]
+    t0 = time.time()
+
+    from . import fig1_querytime, kernels_bench, roofline_report
+    from . import table1_preprocessing, table2_quality
+
+    table1_preprocessing.run(scale)
+    fig1_querytime.run(scale)
+    table2_quality.run(scale)
+    kernels_bench.run()
+    roofline_report.run()
+    print(f"\n# benchmarks done in {time.time() - t0:.1f}s (scale={scale})")
+
+
+if __name__ == "__main__":
+    main()

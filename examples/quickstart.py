@@ -1,0 +1,40 @@
+"""Quickstart: build the paper's index, run dynamically-weighted queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ClusterPruneIndex, brute_force_topk, competitive_recall, weighted_query,
+)
+from repro.data import CorpusConfig, make_corpus
+
+# 1. a semi-structured corpus: title / authors / abstract vector spaces
+docs_np, spec, _ = make_corpus(CorpusConfig(n_docs=8000))
+docs = jnp.asarray(docs_np)
+print(f"corpus: {docs.shape[0]} docs, fields {spec.names} dims {spec.dims}")
+
+# 2. ONE weight-free index (the paper's point: pre-processing never sees
+#    the user weights), FPF k-center clustering x3 independent clusterings
+index = ClusterPruneIndex.build(docs, spec, k_clusters=90, n_clusterings=3,
+                                method="fpf", key=jax.random.PRNGKey(0))
+
+# 3. user queries with PER-REQUEST field weights
+rng = np.random.default_rng(0)
+qids = rng.choice(8000, 16, replace=False)
+queries = docs[qids]
+weights = jnp.asarray(rng.dirichlet([1, 1, 1], 16), jnp.float32)
+
+# reduce (query, weights) -> one cosine query vector (paper §4 theorem)
+qw = weighted_query(queries, weights, spec)
+scores, ids, n_scored = index.search(qw, probes=9, k=10,
+                                     exclude=jnp.asarray(qids, jnp.int32))
+
+# 4. verify against exhaustive search
+gt_s, gt_i = brute_force_topk(docs, qw, 10, exclude=jnp.asarray(qids))
+recall = float(jnp.mean(competitive_recall(ids, gt_i)))
+print(f"recall@10 = {recall:.2f}/10 scanning "
+      f"{float(jnp.mean(n_scored)) / 8000:.1%} of the corpus")

@@ -1,0 +1,51 @@
+"""MIND multi-interest retrieval THROUGH the paper's index.
+
+MIND's serving step IS Dynamic Vector Score Aggregation: 4 interest capsules
+= 4 sources of evidence, per-request interest weights = the paper's dynamic
+weights. This example serves 1M-candidate retrieval two ways and compares:
+  brute  — batched dot against every candidate (the dry-run baseline cell)
+  pruned — the paper's FPF cluster-pruned index over the weighted reduction
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ClusterPruneIndex, FieldSpec, brute_force_topk, competitive_recall,
+    weighted_query,
+)
+from repro.models import recsys as rs
+
+N_ITEMS = 60_000      # scaled-down candidate set (1M in the dry-run cell)
+cfg = rs.MINDConfig(n_items=N_ITEMS, embed_dim=32, n_interests=4, hist_len=20)
+params = rs.mind_init(cfg, jax.random.PRNGKey(0))
+
+# user requests: history + per-request interest weights
+rng = np.random.default_rng(0)
+hist = jnp.asarray(rng.integers(0, N_ITEMS, (8, cfg.hist_len)), jnp.int32)
+interests = rs.mind_interests(params, hist, cfg)          # (8, 4, 32)
+interests = interests / jnp.linalg.norm(interests, axis=-1, keepdims=True)
+w = jnp.asarray(rng.dirichlet([1.0] * 4, 8), jnp.float32)
+
+# paper §4 reduction: weighted multi-interest -> ONE cosine query over the
+# concatenated interest spaces; candidates live replicated in each subspace
+spec = FieldSpec(names=("i0", "i1", "i2", "i3"), dims=(32,) * 4)
+items = params["item_emb"]
+items = items / jnp.linalg.norm(items, axis=-1, keepdims=True)
+docs = jnp.tile(items, (1, 4))                            # (N, 128)
+qw = weighted_query(interests.reshape(8, -1), w, spec)
+
+# brute force (exact)
+gt_s, gt_i = brute_force_topk(docs, qw, 10)
+
+# the paper's pruned index (weight-free build!)
+index = ClusterPruneIndex.build(docs, spec, 250, n_clusterings=3,
+                                method="fpf")
+scores, ids, n_scored = index.search(qw, probes=24, k=10)
+rec = float(jnp.mean(competitive_recall(ids, gt_i)))
+print(f"pruned retrieval recall@10 = {rec:.2f}/10, scanning "
+      f"{float(jnp.mean(n_scored)) / N_ITEMS:.1%} of candidates "
+      f"(vs 100% for brute force)")

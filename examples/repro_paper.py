@@ -1,0 +1,17 @@
+"""Full paper reproduction at TS1 scale (slow: ~54k docs, 250 queries).
+
+    PYTHONPATH=src python examples/repro_paper.py [--scale quick]
+Runs Table 1 (preprocessing), Fig 1 (query time) and Table 2 (quality, 7
+weight sets) — see EXPERIMENTS.md §Repro for recorded outputs.
+"""
+
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks import fig1_querytime, table1_preprocessing, table2_quality
+
+scale = "ts1" if "--scale" not in sys.argv else sys.argv[sys.argv.index("--scale") + 1]
+table1_preprocessing.run(scale)
+fig1_querytime.run(scale)
+table2_quality.run(scale)

@@ -1,0 +1,14 @@
+"""End-to-end serving driver: build -> serve batched weighted requests ->
+verify quality online (the paper's system as a service).
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--docs", "20000", "--queries", "128", "--probes", "12", "--k", "10"],
+    check=True,
+)

@@ -1,0 +1,24 @@
+"""Train a ~100M-param qwen3-style LM for a few hundred steps with
+checkpoint/restart (kill it mid-run; rerunning resumes).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+
+import dataclasses
+
+from repro.configs import get_arch
+from repro.launch.train import train_lm
+from repro.models.transformer import TransformerConfig
+
+# ~100M params: 8 layers x d512 x ff2048, 32k vocab
+cfg = TransformerConfig(
+    name="qwen3-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+    d_head=64, d_ff=2048, vocab=32_000, qk_norm=True,
+    attn_q_chunk=128, attn_kv_chunk=128, max_seq_len=512,
+)
+params, losses = train_lm(
+    cfg, steps=200, batch=8, seq_len=256, ckpt_dir="/tmp/repro_train_lm",
+    ckpt_every=50, lr=3e-4,
+)
+print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+assert losses[-1] < losses[0]

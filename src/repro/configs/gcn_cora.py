@@ -1,0 +1,56 @@
+"""gcn-cora [arXiv:1609.02907] — 2-layer GCN, d_hidden 16, sym norm.
+
+Four shape cells: Cora full-batch (2708 nodes / 1433 feats / 7 classes),
+Reddit-scale sampled minibatch (232,965 nodes, 114.6M edges, fanout 15-10,
+d_feat 602 / 41 classes — Reddit's published stats), ogbn-products
+full-batch (2.45M nodes / 61.86M edges / d 100 / 47 classes), and batched
+molecule graphs (128 x 30 nodes). Message passing is segment_sum scatter
+(JAX has no CSR — DESIGN.md §4); the minibatch cell consumes the REAL
+neighbor sampler in ``repro.data.graphs``.
+"""
+
+from __future__ import annotations
+
+from repro.models.gnn import GCNConfig
+from .common import gnn_full_cell, gnn_minibatch_cell, gnn_molecule_cell
+
+ARCH_ID = "gcn-cora"
+
+
+def make_config() -> GCNConfig:
+    return GCNConfig(name=ARCH_ID, n_layers=2, d_in=1433, d_hidden=16,
+                     n_classes=7, aggregator="mean", norm="sym")
+
+
+def make_smoke_config() -> GCNConfig:
+    return GCNConfig(name=ARCH_ID + "-smoke", n_layers=2, d_in=64,
+                     d_hidden=16, n_classes=7)
+
+
+def cells():
+    return [
+        gnn_full_cell(
+            ARCH_ID, make_config(), n_nodes=2708, n_edges=10_556,
+            shape_name="full_graph_sm",
+        ),
+        gnn_minibatch_cell(
+            ARCH_ID,
+            GCNConfig(name=ARCH_ID, n_layers=2, d_in=602, d_hidden=16,
+                      n_classes=41),
+            batch_nodes=1024, fanouts=(15, 10), shape_name="minibatch_lg",
+        ),
+        gnn_full_cell(
+            ARCH_ID,
+            GCNConfig(name=ARCH_ID, n_layers=2, d_in=100, d_hidden=16,
+                      n_classes=47),
+            n_nodes=2_449_029, n_edges=61_859_140,
+            shape_name="ogb_products",
+        ),
+        gnn_molecule_cell(
+            ARCH_ID,
+            GCNConfig(name=ARCH_ID, n_layers=2, d_in=16, d_hidden=16,
+                      n_classes=2, readout="mean"),
+            batch=128, nodes_per_graph=30, edges_per_graph=64,
+            shape_name="molecule",
+        ),
+    ]

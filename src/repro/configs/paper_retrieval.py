@@ -1,0 +1,224 @@
+"""The paper's own system as an arch config: FPF cluster-pruned retrieval.
+
+Production sizing: a 100M-document corpus (hashed multi-field tf-idf,
+D = 4096 = 1024+1024+2048), doc-sharded over every mesh axis; K = 3 x 10k
+clusters (leaders replicated); dynamic weighted queries reduced to plain
+cosine queries at the edge (§4 theorem — zero preprocessing dependence on
+weights). Serve step = probe leaders -> bucket gather-score (local) ->
+collective-light global top-k merge (2·k words per device).
+
+Cells:
+  serve_online   batch=256 weighted queries through the pruned index
+  serve_brute    batch=256 exhaustive (the quality baseline / GT generator)
+  build_assign   one FPF assignment pass over the sharded corpus
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fields import FieldSpec
+from repro.runtime.sharding import data_axes, spec_for
+from .common import Cell
+
+ARCH_ID = "paper-retrieval"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    name: str = ARCH_ID
+    n_docs: int = 99_999_744          # ~100M, divisible by 256 and 512 shards
+    field_dims: tuple[int, ...] = (1024, 1024, 2048)
+    n_clusterings: int = 3
+    k_clusters: int = 10_000
+    bucket_pad: int = 64              # PER-SHARD padded bucket size
+                                      # (n_docs/shards/K ~ 20 rows + slack)
+    k: int = 10
+    probes: int = 18
+    dtype = jnp.bfloat16
+
+    @property
+    def spec(self) -> FieldSpec:
+        return FieldSpec(names=("title", "authors", "abstract"),
+                         dims=self.field_dims)
+
+    @property
+    def d(self) -> int:
+        return self.spec.total_dim
+
+
+def make_config() -> RetrievalConfig:
+    return RetrievalConfig()
+
+
+def make_smoke_config() -> RetrievalConfig:
+    return RetrievalConfig(
+        name=ARCH_ID + "-smoke", n_docs=2_000, field_dims=(32, 32, 64),
+        n_clusterings=3, k_clusters=32, bucket_pad=16, probes=6,
+    )
+
+
+def _serve_pruned_cell(cfg: RetrievalConfig, batch: int):
+    def build(mesh):
+        da = data_axes(mesh)
+        all_axes = da + ("model",)
+        n_shards = 1
+        for a in all_axes:
+            n_shards *= mesh.shape[a]
+        n_local = cfg.n_docs // n_shards
+        t, kc, bp = cfg.n_clusterings, cfg.k_clusters, cfg.bucket_pad
+
+        from repro.core.distributed import distributed_index_search
+
+        probes_t = tuple(
+            cfg.probes // t + (1 if i < cfg.probes % t else 0)
+            for i in range(t)
+        )
+
+        def step(docs, leaders, buckets_local, qw):
+            return distributed_index_search(
+                mesh, docs, leaders, buckets_local, qw,
+                probes_t=probes_t, k=cfg.k, shard_axes=all_axes,
+            )
+
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_docs, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((t, kc, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((n_shards, t, kc, bp), jnp.int32),
+            jax.ShapeDtypeStruct((batch, cfg.d), cfg.dtype),
+        )
+        in_shard = (
+            P(all_axes, None),
+            P(None, None, None),
+            P(all_axes, None, None, None),
+            P(None, None),
+        )
+        out_shard = (P(None, None), P(None, None))
+        return step, args, in_shard, out_shard
+
+    return Cell(
+        arch=ARCH_ID, shape="serve_online", kind="retrieval", build=build,
+        note="paper's pruned search, multi-pod",
+        model_flops=2.0 * batch * cfg.d * (
+            cfg.n_clusterings * cfg.k_clusters + cfg.probes * cfg.bucket_pad * 512
+        ),
+    )
+
+
+def _serve_pruned_prefilter_cell(cfg: RetrievalConfig, batch: int,
+                                 proj_dim: int = 256, shortlist: int = 64):
+    """§Perf hillclimbed serve: two-stage JL-projected candidate scoring."""
+
+    def build(mesh):
+        da = data_axes(mesh)
+        all_axes = da + ("model",)
+        n_shards = 1
+        for a in all_axes:
+            n_shards *= mesh.shape[a]
+        t, kc, bp = cfg.n_clusterings, cfg.k_clusters, cfg.bucket_pad
+
+        from repro.core.distributed import distributed_index_search
+
+        probes_t = tuple(
+            cfg.probes // t + (1 if i < cfg.probes % t else 0)
+            for i in range(t)
+        )
+
+        def step(docs, docs_proj, leaders, buckets_local, qw, qw_proj):
+            return distributed_index_search(
+                mesh, docs, leaders, buckets_local, qw,
+                probes_t=probes_t, k=cfg.k, shard_axes=all_axes,
+                docs_proj=docs_proj, qw_proj=qw_proj, shortlist=shortlist,
+            )
+
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_docs, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((cfg.n_docs, proj_dim), cfg.dtype),
+            jax.ShapeDtypeStruct((t, kc, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((n_shards, t, kc, bp), jnp.int32),
+            jax.ShapeDtypeStruct((batch, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((batch, proj_dim), cfg.dtype),
+        )
+        in_shard = (
+            P(all_axes, None), P(all_axes, None), P(None, None, None),
+            P(all_axes, None, None, None), P(None, None), P(None, None),
+        )
+        out_shard = (P(None, None), P(None, None))
+        return step, args, in_shard, out_shard
+
+    return Cell(
+        arch=ARCH_ID, shape="serve_online_prefilter", kind="retrieval",
+        build=build, note="two-stage JL prefilter (beyond-paper, §Perf)",
+        model_flops=2.0 * batch * (
+            cfg.n_clusterings * cfg.k_clusters * cfg.d
+            + cfg.probes * cfg.bucket_pad * 512 * proj_dim
+            + shortlist * 512 * cfg.d
+        ),
+    )
+
+
+def _serve_brute_cell(cfg: RetrievalConfig, batch: int):
+    def build(mesh):
+        da = data_axes(mesh)
+        all_axes = da + ("model",)
+
+        from repro.core.distributed import distributed_brute_topk
+
+        def step(docs, qw):
+            return distributed_brute_topk(
+                mesh, docs, qw, k=cfg.k, shard_axes=all_axes
+            )
+
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_docs, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((batch, cfg.d), cfg.dtype),
+        )
+        in_shard = (P(all_axes, None), P(None, None))
+        out_shard = (P(None, None), P(None, None))
+        return step, args, in_shard, out_shard
+
+    return Cell(arch=ARCH_ID, shape="serve_brute", kind="retrieval",
+                build=build, note="exhaustive baseline (ground truth)",
+                model_flops=2.0 * batch * cfg.n_docs * cfg.d)
+
+
+def _build_assign_cell(cfg: RetrievalConfig):
+    """One assignment pass: every doc to its nearest of K leaders (the
+    dominating preprocessing cost after FPF-on-sample)."""
+
+    def build(mesh):
+        da = data_axes(mesh)
+        all_axes = da + ("model",)
+
+        def step(docs, leaders):
+            sims = jnp.einsum(
+                "nd,kd->nk", docs, leaders[0],
+                preferred_element_type=jnp.float32,
+            )
+            return jnp.argmax(sims, axis=-1).astype(jnp.int32)
+
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_docs, cfg.d), cfg.dtype),
+            jax.ShapeDtypeStruct((cfg.n_clusterings, cfg.k_clusters, cfg.d),
+                                 cfg.dtype),
+        )
+        in_shard = (P(all_axes, None), P(None, None, None))
+        out_shard = P(all_axes)
+        return step, args, in_shard, out_shard
+
+    return Cell(arch=ARCH_ID, shape="build_assign", kind="build", build=build,
+                model_flops=2.0 * cfg.n_docs * cfg.k_clusters * cfg.d)
+
+
+def cells():
+    cfg = make_config()
+    return [
+        _serve_pruned_cell(cfg, batch=256),
+        _serve_pruned_prefilter_cell(cfg, batch=256),
+        _serve_brute_cell(cfg, batch=256),
+        _build_assign_cell(cfg),
+    ]

@@ -1,0 +1,46 @@
+"""The paper's primary contribution: dynamic user-defined similarity search.
+
+Layers:
+  fields      multi-field vector-space corpus (concat layout)
+  weights     query-side dynamic weight embedding (the paper's §4 theorem)
+  fpf         furthest-point-first k-center clustering (the paper's clusterer)
+  kmeans      Lloyd spherical k-means (CellDec's clusterer)
+  leaders     PODS'07 random-leader clustering
+  index       ClusterPruneIndex — T independent clusterings + pruned search
+  celldec     CellDec weight-region baseline [Singitham et al. VLDB'04]
+  metrics     competitive recall, NAG, brute-force ground truth
+  distributed shard_map doc-sharded search + collective-light top-k merge
+"""
+
+from .fields import FieldSpec, concat_fields, normalize_fields, split_fields
+from .weights import (
+    aggregate_similarity,
+    cosine_distance,
+    expand_weights,
+    nwd,
+    weighted_query,
+)
+from .fpf import ClusteringResult, assign_to_centers, fpf_centers, fpf_cluster
+from .kmeans import kmeans_cluster
+from .leaders import random_leader_cluster
+from .index import CLUSTERERS, ClusterPruneIndex, pack_buckets
+from .celldec import CellDecIndex, region_of, region_weights
+from .metrics import (
+    brute_force_bottomk,
+    brute_force_topk,
+    competitive_recall,
+    normalized_aggregate_goodness,
+    quality_report,
+)
+
+__all__ = [
+    "FieldSpec", "concat_fields", "normalize_fields", "split_fields",
+    "aggregate_similarity", "cosine_distance", "expand_weights", "nwd",
+    "weighted_query",
+    "ClusteringResult", "assign_to_centers", "fpf_centers", "fpf_cluster",
+    "kmeans_cluster", "random_leader_cluster",
+    "CLUSTERERS", "ClusterPruneIndex", "pack_buckets",
+    "CellDecIndex", "region_of", "region_weights",
+    "brute_force_bottomk", "brute_force_topk", "competitive_recall",
+    "normalized_aggregate_goodness", "quality_report",
+]

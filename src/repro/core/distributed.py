@@ -1,0 +1,246 @@
+"""Distributed cluster-prune search — corpus sharded over the device mesh.
+
+Layout (DESIGN.md §4/§6):
+
+* **docs** row-sharded over the ``shard_axes`` (``("pod", "data")`` on the
+  production mesh) — every device owns an ``n/devices`` slice.
+* **leaders** replicated: ``T*K`` representatives are tiny (K ~ sqrt(n)).
+* **buckets** are *local*: each device packs its own slice of every cluster,
+  so probing cluster ``c`` touches every shard's local members of ``c`` —
+  search work stays embarrassingly parallel and perfectly balanced.
+* the only collective is the final **top-k merge**: ``all_gather`` of
+  ``(k,)`` scores+ids per device (2·k·4 bytes each — collective-light by
+  construction), then a replicated merge.
+
+The same module provides the brute-force distributed top-k used by the
+``retrieval_cand`` serving cells and as the exact baseline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+__all__ = [
+    "local_topk",
+    "merge_topk",
+    "distributed_brute_topk",
+    "distributed_index_search",
+    "shard_docs",
+]
+
+
+def shard_docs(docs: jnp.ndarray, mesh: Mesh, axes: Sequence[str]):
+    """Place a (n, D) corpus row-sharded over ``axes`` of ``mesh``."""
+    return jax.device_put(docs, NamedSharding(mesh, P(tuple(axes), None)))
+
+
+def local_topk(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Top-k of a local score set; ids carried along. (..., m) -> (..., k)."""
+    top_s, pos = jax.lax.top_k(scores, k)
+    return top_s, jnp.take_along_axis(ids, pos, axis=-1)
+
+
+def merge_topk(
+    s_parts: jnp.ndarray, i_parts: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge gathered per-shard top-k blocks ``(..., shards, k)`` -> (..., k)."""
+    flat_s = s_parts.reshape(*s_parts.shape[:-2], -1)
+    flat_i = i_parts.reshape(*i_parts.shape[:-2], -1)
+    return local_topk(flat_s, flat_i, k)
+
+
+def _brute_local(docs_l, qw, exclude, offset, *, k):
+    """Score a local shard exhaustively and return its top-k (global ids)."""
+    n_l = docs_l.shape[0]
+    ids = offset + jnp.arange(n_l, dtype=jnp.int32)
+    s = qw @ docs_l.T                                    # (nq, n_l)
+    s = jnp.where(ids[None, :] == exclude[:, None], -jnp.inf, s)
+    return local_topk(s, jnp.broadcast_to(ids, s.shape), k)
+
+
+def distributed_brute_topk(
+    mesh: Mesh,
+    docs: jnp.ndarray,       # (n, D) — row-sharded or to-be-sharded
+    qw: jnp.ndarray,         # (nq, D) replicated queries
+    *,
+    k: int,
+    shard_axes: Sequence[str] = ("data",),
+    exclude: jnp.ndarray | None = None,
+):
+    """Exact distributed top-k: local score+top-k, all-gather 2k words, merge.
+
+    Returns replicated ``(scores (nq, k), ids (nq, k))``.
+    """
+    axes = tuple(shard_axes)
+    nq = qw.shape[0]
+    if exclude is None:
+        exclude = jnp.full((nq,), -1, jnp.int32)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    shard_rows = docs.shape[0] // n_shards
+
+    def kernel(docs_l, qw_r, ex_r):
+        idx = jax.lax.axis_index(axes)
+        offset = (idx * shard_rows).astype(jnp.int32)
+        s, i = _brute_local(docs_l, qw_r, ex_r, offset, k=k)
+        s_all = jax.lax.all_gather(s, axes, axis=0, tiled=False)  # (S, nq, k)
+        i_all = jax.lax.all_gather(i, axes, axis=0, tiled=False)
+        s_all = jnp.moveaxis(s_all, 0, -2)                         # (nq, S, k)
+        i_all = jnp.moveaxis(i_all, 0, -2)
+        return merge_topk(s_all, i_all, k)
+
+    fn = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_rep=False,
+    )
+    return jax.jit(fn)(docs, qw, exclude)
+
+
+def make_projection(d: int, proj_dim: int, key=None):
+    """Random JL projection ``R (D, pd)`` for two-stage scoring."""
+    if key is None:
+        key = jax.random.PRNGKey(42)
+    return (
+        jax.random.normal(key, (d, proj_dim), jnp.float32) * proj_dim ** -0.5
+    )
+
+
+def distributed_index_search(
+    mesh: Mesh,
+    docs: jnp.ndarray,        # (n, D) row-sharded corpus (n divisible by shards)
+    leaders: jnp.ndarray,     # (T, K, D) replicated
+    buckets_local: jnp.ndarray,  # (S, T, K, B_l) LOCAL ids per shard, sentinel n_l
+    qw: jnp.ndarray,          # (nq, D) replicated weighted queries
+    *,
+    probes_t: tuple[int, ...],
+    k: int,
+    shard_axes: Sequence[str] = ("data",),
+    exclude: jnp.ndarray | None = None,
+    docs_proj: jnp.ndarray | None = None,   # (n, pd) projected corpus
+    qw_proj: jnp.ndarray | None = None,     # (nq, pd) projected queries
+    shortlist: int = 64,
+):
+    """Distributed cluster-prune search over a doc-sharded corpus.
+
+    ``buckets_local[s]`` packs shard ``s``'s members of every (clustering,
+    cluster) pair with sentinel ``n_local``. Probing is replicated (same
+    clusters everywhere — leaders are global); scoring is local; a single
+    all-gather of the per-shard top-k merges the answer.
+
+    **Two-stage scoring (beyond-paper, §Perf)**: when ``docs_proj``/
+    ``qw_proj`` are given, candidates are first scored against the
+    ``pd``-dim JL projection (8-16x fewer HBM bytes), the per-shard top
+    ``shortlist`` survive to exact full-D scoring. Recall impact is bounded
+    by the JL distortion and validated in tests/test_distributed_prefilter.
+    """
+    axes = tuple(shard_axes)
+    nq = qw.shape[0]
+    if exclude is None:
+        exclude = jnp.full((nq,), -1, jnp.int32)
+    n_shards = buckets_local.shape[0]
+    n_local = docs.shape[0] // n_shards
+    two_stage = docs_proj is not None
+
+    def kernel(docs_l, leaders_r, bkt_l, qw_r, ex_r, *proj):
+        sidx = jax.lax.axis_index(axes)
+        offset = (sidx * n_local).astype(jnp.int32)
+        bkt = bkt_l[0]                                   # (T, K, B_l)
+        lsims = jnp.einsum("tkd,qd->qtk", leaders_r, qw_r)
+        cand_parts = []
+        for t, p in enumerate(probes_t):
+            if p == 0:
+                continue
+            _, top_c = jax.lax.top_k(lsims[:, t, :], p)  # (nq, p)
+            cand_parts.append(bkt[t][top_c].reshape(nq, -1))
+        cand = jnp.concatenate(cand_parts, axis=-1)      # (nq, m) local ids
+        valid = cand < n_local
+
+        if two_stage:
+            docs_proj_l, qw_proj_r = proj
+            safe = jnp.where(valid, cand, 0)
+            cp = docs_proj_l[safe]                        # (nq, m, pd)
+            s1 = jnp.einsum(
+                "qmp,qp->qm", cp, qw_proj_r,
+                preferred_element_type=jnp.float32,
+            )
+            s1 = jnp.where(valid, s1, -jnp.inf)
+            _, keep_pos = jax.lax.top_k(s1, min(shortlist, s1.shape[-1]))
+            cand = jnp.take_along_axis(cand, keep_pos, axis=-1)
+            valid = jnp.take_along_axis(valid, keep_pos, axis=-1)
+
+        safe = jnp.where(valid, cand, 0)
+        cvec = docs_l[safe]                               # (nq, m|L, D)
+        s = jnp.einsum(
+            "qmd,qd->qm", cvec, qw_r, preferred_element_type=jnp.float32
+        )
+        gids = jnp.where(valid, cand + offset, -1)
+        s = jnp.where(valid, s, -jnp.inf)
+        s = jnp.where(gids == ex_r[:, None], -jnp.inf, s)
+        # local dedup across overlapping clusterings
+        order = jnp.argsort(cand, axis=-1)
+        c_s = jnp.take_along_axis(cand, order, axis=-1)
+        s_s = jnp.take_along_axis(s, order, axis=-1)
+        g_s = jnp.take_along_axis(gids, order, axis=-1)
+        dup = c_s == jnp.pad(c_s[:, :-1], ((0, 0), (1, 0)), constant_values=-1)
+        s_s = jnp.where(dup, -jnp.inf, s_s)
+        s_loc, i_loc = local_topk(s_s, g_s, k)
+        s_all = jnp.moveaxis(jax.lax.all_gather(s_loc, axes, axis=0), 0, -2)
+        i_all = jnp.moveaxis(jax.lax.all_gather(i_loc, axes, axis=0), 0, -2)
+        return merge_topk(s_all, i_all, k)
+
+    in_specs = [
+        P(axes, None), P(None, None, None),
+        P(axes, None, None, None), P(None, None), P(None),
+    ]
+    args = [docs, leaders, buckets_local, qw, exclude]
+    if two_stage:
+        in_specs += [P(axes, None), P(None, None)]
+        args += [docs_proj, qw_proj]
+    fn = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(None, None), P(None, None)),
+        check_rep=False,
+    )
+    return jax.jit(fn)(*args)
+
+
+def build_local_buckets(assign_global, n, n_shards, k_clusters):
+    """Host-side: split global assignments into per-shard local bucket packs.
+
+    ``assign_global`` is ``(T, n)`` (one row per clustering). Returns
+    ``(S, T, K, B_l)`` padded id tensors with LOCAL row ids and sentinel
+    ``n_local``, ready for :func:`distributed_index_search`.
+    """
+    import numpy as np
+
+    from .index import pack_buckets
+
+    assign_global = np.atleast_2d(np.asarray(assign_global))
+    t_clusterings = assign_global.shape[0]
+    n_local = n // n_shards
+    packs = [[None] * t_clusterings for _ in range(n_shards)]
+    b_max = 8
+    for s in range(n_shards):
+        for t in range(t_clusterings):
+            a = assign_global[t, s * n_local : (s + 1) * n_local]
+            ids, _ = pack_buckets(a, k_clusters, n_local)
+            packs[s][t] = ids
+            b_max = max(b_max, ids.shape[1])
+    out = np.full((n_shards, t_clusterings, k_clusters, b_max), n_local, np.int32)
+    for s in range(n_shards):
+        for t in range(t_clusterings):
+            p = packs[s][t]
+            out[s, t, :, : p.shape[1]] = p
+    return out

@@ -1,0 +1,236 @@
+"""Multi-clustering cluster-prune index — the paper's search structure.
+
+Build: ``T`` (default 3) *independent* clusterings of the weight-free
+concatenated corpus (FPF by default). Search: embed the user weights into the
+query (:func:`repro.core.weights.weighted_query`), probe the ``b/T`` clusters
+with the most similar representatives in *each* clustering, exhaustively score
+the union of their buckets, return the top-k.
+
+TPU layout: buckets are a single padded ``(T, K, B)`` id tensor (sentinel =
+``n``), so a probe is a static-shape gather and the scoring of all visited
+buckets is one MXU matmul per query block (see ``repro.kernels.bucket_score``
+for the fused kernel; this module is the pure-JAX reference path and the
+single-host fast path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fields import FieldSpec
+from .fpf import ClusteringResult, fpf_cluster
+from .kmeans import kmeans_cluster
+from .leaders import random_leader_cluster
+from .weights import weighted_query
+
+__all__ = ["ClusterPruneIndex", "pack_buckets", "CLUSTERERS"]
+
+CLUSTERERS: dict[str, Callable[..., ClusteringResult]] = {
+    "fpf": fpf_cluster,
+    "kmeans": kmeans_cluster,
+    "random": random_leader_cluster,
+}
+
+
+def pack_buckets(
+    assign: np.ndarray, k: int, n: int, bucket_pad: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack an assignment vector into a padded (K, B) bucket-id matrix.
+
+    Padding uses the sentinel id ``n`` (one past the last valid doc). ``B`` is
+    the max bucket size rounded up to a multiple of 8 (TPU sublane friendly).
+    """
+    counts = np.bincount(assign, minlength=k).astype(np.int32)
+    b = int(counts.max()) if bucket_pad is None else bucket_pad
+    b = max(8, -(-b // 8) * 8)
+    ids = np.full((k, b), n, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    # position of each doc inside its bucket
+    start = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(counts, out=start[1:])
+    pos = np.arange(len(assign)) - start[sorted_assign]
+    ids[sorted_assign, pos] = order
+    return ids, counts
+
+
+def _split_probes(probes: int, t: int) -> tuple[int, ...]:
+    """Distribute a total probe budget over T clusterings (paper: evenly)."""
+    base, rem = divmod(probes, t)
+    return tuple(base + (1 if i < rem else 0) for i in range(t))
+
+
+@dataclasses.dataclass
+class ClusterPruneIndex:
+    """The paper's index: T independent clusterings over a weight-free corpus."""
+
+    spec: FieldSpec
+    docs: jnp.ndarray       # (n, D) per-field unit-normalised corpus
+    leaders: jnp.ndarray    # (T, K, D)
+    buckets: jnp.ndarray    # (T, K, B) int32, sentinel = n
+    counts: jnp.ndarray     # (T, K) int32
+    method: str = "fpf"
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        docs: jnp.ndarray,
+        spec: FieldSpec,
+        k_clusters: int,
+        *,
+        n_clusterings: int = 3,
+        method: str = "fpf",
+        key: jax.Array | None = None,
+        **clusterer_kwargs,
+    ) -> "ClusterPruneIndex":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        n = docs.shape[0]
+        clusterer = CLUSTERERS[method]
+        reps_l, ids_l, counts_l = [], [], []
+        for t, sub in enumerate(jax.random.split(key, n_clusterings)):
+            res = clusterer(docs, k_clusters, sub, **clusterer_kwargs)
+            reps_l.append(res.reps)
+            ids, counts = pack_buckets(
+                np.asarray(res.assign), k_clusters, n
+            )
+            ids_l.append(ids)
+            counts_l.append(counts)
+        b = max(ids.shape[1] for ids in ids_l)
+        ids_l = [
+            np.pad(ids, ((0, 0), (0, b - ids.shape[1])), constant_values=n)
+            for ids in ids_l
+        ]
+        return cls(
+            spec=spec,
+            docs=docs,
+            leaders=jnp.stack(reps_l),
+            buckets=jnp.asarray(np.stack(ids_l)),
+            counts=jnp.asarray(np.stack(counts_l)),
+            method=method,
+        )
+
+    # ----------------------------------------------------------------- search
+    @property
+    def n_docs(self) -> int:
+        return self.docs.shape[0]
+
+    def search_weighted(
+        self,
+        q: jnp.ndarray,
+        w: jnp.ndarray,
+        *,
+        probes: int,
+        k: int,
+        exclude: jnp.ndarray | None = None,
+    ):
+        """Search with per-field query ``q (nq, D)`` and weights ``w (nq, s)``."""
+        qw = weighted_query(q, w, self.spec)
+        return self.search(qw, probes=probes, k=k, exclude=exclude)
+
+    def search(
+        self,
+        qw: jnp.ndarray,
+        *,
+        probes: int,
+        k: int,
+        exclude: jnp.ndarray | None = None,
+        qchunk: int = 8,
+        nav_query: jnp.ndarray | None = None,
+    ):
+        """Cluster-pruned top-k for pre-weighted queries ``qw (nq, D)``.
+
+        ``nav_query``: optional separate query for LEADER navigation (the
+        CellDec baseline navigates with the region-squeezed composite while
+        scoring exactly — [18] §5.4); defaults to ``qw``.
+
+        Returns ``(scores (nq,k), ids (nq,k), n_scored (nq,))`` where
+        ``n_scored`` counts true distance computations (leaders + candidates)
+        for the paper's Fig-1 cost accounting.
+        """
+        single = qw.ndim == 1
+        qw = jnp.atleast_2d(qw)
+        nq = qw.shape[0]
+        nav = qw if nav_query is None else jnp.atleast_2d(nav_query)
+        if exclude is None:
+            exclude = jnp.full((nq,), -1, jnp.int32)
+        exclude = jnp.broadcast_to(jnp.atleast_1d(exclude), (nq,))
+        probes_t = _split_probes(probes, self.leaders.shape[0])
+        fn = functools.partial(
+            _search_block, self.docs, self.leaders, self.buckets,
+            probes_t=probes_t, k=k,
+        )
+        pad = (-nq) % qchunk
+        qp = jnp.pad(qw, ((0, pad), (0, 0)))
+        np_ = jnp.pad(nav, ((0, pad), (0, 0)))
+        ep = jnp.pad(exclude, (0, pad), constant_values=-1)
+        scores, ids, scored = jax.lax.map(
+            lambda args: fn(*args),
+            (
+                qp.reshape(-1, qchunk, qp.shape[-1]),
+                np_.reshape(-1, qchunk, np_.shape[-1]),
+                ep.reshape(-1, qchunk),
+            ),
+        )
+        scores = scores.reshape(-1, k)[:nq]
+        ids = ids.reshape(-1, k)[:nq]
+        scored = scored.reshape(-1)[:nq]
+        if single:
+            return scores[0], ids[0], scored[0]
+        return scores, ids, scored
+
+
+@functools.partial(jax.jit, static_argnames=("probes_t", "k"))
+def _search_block(
+    docs: jnp.ndarray,     # (n, D)
+    leaders: jnp.ndarray,  # (T, K, D)
+    buckets: jnp.ndarray,  # (T, K, B) sentinel n
+    qw: jnp.ndarray,       # (bq, D) weighted, normalised queries (scoring)
+    nav: jnp.ndarray,      # (bq, D) navigation queries (= qw unless CellDec)
+    exclude: jnp.ndarray,  # (bq,) doc id to mask (or -1)
+    *,
+    probes_t: tuple[int, ...],
+    k: int,
+):
+    """One query block: probe -> gather buckets -> score union -> dedup top-k."""
+    n = docs.shape[0]
+    lsims = jnp.einsum("tkd,qd->qtk", leaders, nav)  # (bq, T, K)
+
+    cand_parts = []
+    for t, p in enumerate(probes_t):
+        if p == 0:
+            continue
+        _, top_clusters = jax.lax.top_k(lsims[:, t, :], p)   # (bq, p)
+        cand_parts.append(buckets[t][top_clusters].reshape(qw.shape[0], -1))
+    cand = jnp.concatenate(cand_parts, axis=-1)              # (bq, m)
+
+    valid = cand < n
+    safe = jnp.where(valid, cand, 0)
+    cvecs = docs[safe]                                        # (bq, m, D)
+    scores = jnp.einsum("qmd,qd->qm", cvecs, qw)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    scores = jnp.where(cand == exclude[:, None], -jnp.inf, scores)
+
+    # Dedup across overlapping clusterings: identical doc => identical score,
+    # so sorting by id and masking equal neighbours keeps exactly one copy.
+    order = jnp.argsort(cand, axis=-1)
+    c_sorted = jnp.take_along_axis(cand, order, axis=-1)
+    s_sorted = jnp.take_along_axis(scores, order, axis=-1)
+    dup = c_sorted == jnp.pad(c_sorted[:, :-1], ((0, 0), (1, 0)), constant_values=-1)
+    s_sorted = jnp.where(dup, -jnp.inf, s_sorted)
+
+    top_s, pos = jax.lax.top_k(s_sorted, k)
+    top_ids = jnp.take_along_axis(c_sorted, pos, axis=-1)
+    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
+
+    # Cost accounting (paper Fig 1): every valid candidate is one distance
+    # computation (dups included — they really are scored), plus all leaders.
+    n_scored = jnp.sum(valid, axis=-1) + leaders.shape[0] * leaders.shape[1]
+    return top_s, top_ids, n_scored

@@ -1,0 +1,37 @@
+"""Random-leader clustering — the PODS'07 baseline [Chierichetti et al.].
+
+Pick ``K`` documents uniformly at random as leaders, assign every document to
+its closest leader, then use each group's *centroid* as the representative for
+cluster-prune search (exactly the scheme the paper benchmarks as "PODS07").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fpf import ClusteringResult, assign_to_centers
+
+__all__ = ["random_leader_cluster"]
+
+
+def random_leader_cluster(
+    x: jnp.ndarray,
+    k: int,
+    key: jax.Array,
+    *,
+    chunk: int = 16384,
+) -> ClusteringResult:
+    n = x.shape[0]
+    leader_idx = jax.random.permutation(key, n)[:k]
+    assign, _ = assign_to_centers(x, x[leader_idx], chunk=chunk)
+    counts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), assign, k)
+    cent = jax.ops.segment_sum(x, assign, k)
+    norm = jnp.linalg.norm(cent, axis=-1, keepdims=True)
+    reps = jnp.where(counts[:, None] > 0, cent / jnp.maximum(norm, 1e-12), x[leader_idx])
+    # Re-derive point->centroid similarity for the radius statistic.
+    assign2, sim2 = assign_to_centers(x, reps, chunk=chunk)
+    del assign2  # search uses the ORIGINAL leader assignment (per the paper)
+    return ClusteringResult(
+        assign=assign, reps=reps, counts=counts, max_radius=1.0 - jnp.min(sim2)
+    )

@@ -1,0 +1,28 @@
+"""Synthetic but *structured* data pipelines (the container has no internet).
+
+corpus       3-field Citeseer-like document corpus (topic mixture + Zipf +
+             tf-idf + feature hashing) — the paper's TS1/TS2 stand-in
+lm           Zipf token streams for LM training, deterministic per-shard
+recsys_data  click-log generator: dense + multi-hot sparse features, labels
+graphs       Cora-like SBM, power-law graphs, molecule batches, k-hop sampler
+"""
+
+from .corpus import CorpusConfig, make_corpus
+from .lm import TokenStream, lm_batch
+from .recsys_data import RecsysBatchConfig, click_batch, history_batch
+from .graphs import (
+    GraphData,
+    cora_like,
+    molecule_batch,
+    power_law_graph,
+    sample_khop,
+    to_csr,
+)
+
+__all__ = [
+    "CorpusConfig", "make_corpus",
+    "TokenStream", "lm_batch",
+    "RecsysBatchConfig", "click_batch", "history_batch",
+    "GraphData", "cora_like", "molecule_batch", "power_law_graph",
+    "sample_khop", "to_csr",
+]

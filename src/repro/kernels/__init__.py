@@ -1,0 +1,24 @@
+"""TPU Pallas kernels for the paper's compute hot spots (DESIGN.md §7).
+
+topk_score    streaming fused score+top-k (brute-force scoring / ground truth)
+bucket_score  cluster-prune inner loop: probed-bucket gather -> score -> merge
+fpf_iter      fused FPF preprocessing round (distance, running-min, argmax)
+embed_bag     EmbeddingBag gather+reduce (assigned recsys archs' hot path)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
+"""
+
+from .topk_score import topk_score, topk_score_ref
+from .bucket_score import bucket_score, bucket_score_ref
+from .bucket_score.ops import pack_bucket_major
+from .fpf_iter import fpf_iter, fpf_iter_ref
+from .fpf_iter.ops import fpf_centers_fused
+from .embed_bag import embed_bag, embed_bag_ref
+
+__all__ = [
+    "topk_score", "topk_score_ref",
+    "bucket_score", "bucket_score_ref", "pack_bucket_major",
+    "fpf_iter", "fpf_iter_ref", "fpf_centers_fused",
+    "embed_bag", "embed_bag_ref",
+]

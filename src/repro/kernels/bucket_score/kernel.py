@@ -1,0 +1,58 @@
+"""Cluster-prune inner loop: probed-bucket gather → score → top-k merge.
+
+TPU adaptation of "visit cluster = walk its posting list" (DESIGN.md §4): the
+corpus is stored **bucket-major** as a padded ``(K, B, D)`` tensor, so a probe
+is a *contiguous block read* selected by a scalar-prefetched probe list — no
+row gather. Each grid step scores one whole bucket against one query on the
+MXU and merges into that query's running top-k in VMEM.
+
+Grid: ``(nq, P)`` — probe minor, so the (1, K) output block of a query stays
+VMEM-resident across its probe sweep. ``probes`` is ``(nq, P)`` because every
+query probes different clusters (the essence of cluster pruning).
+
+VMEM per step: ``B·D + D + 2·(K+B)`` floats — bucket pad B and D choose the
+block budget; at B = 512, D = 4096 that is ~8 MB.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_score_kernel"]
+
+
+def bucket_score_kernel(
+    probes_ref,   # (nq, P) int32 — scalar-prefetched probe lists
+    q_ref,        # (1, D)  VMEM — this query
+    bd_ref,       # (1, B, D) VMEM — the probed bucket's member vectors
+    bi_ref,       # (1, B) int32 VMEM — the probed bucket's global doc ids (-1 pad)
+    ex_ref,       # (1, 1) int32 — excluded doc id
+    s_out,        # (1, K) VMEM accumulator
+    i_out,        # (1, K) VMEM accumulator
+):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        s_out[...] = jnp.full_like(s_out, -jnp.inf)
+        i_out[...] = jnp.full_like(i_out, -1)
+
+    data = bd_ref[0]                                   # (B, D)
+    ids = bi_ref[...]                                  # (1, B)
+    s = jnp.dot(
+        q_ref[...], data.T, preferred_element_type=jnp.float32
+    )                                                  # (1, B)
+    s = jnp.where(ids >= 0, s, -jnp.inf)               # bucket padding
+    s = jnp.where(ids == ex_ref[...], -jnp.inf, s)     # query-self exclusion
+    # Overlap dedup (multi-clustering): drop ids already in the running top-k.
+    dup = jnp.any(ids[0][None, :, None] == i_out[...][0][None, None, :], axis=-1)
+    s = jnp.where(dup, -jnp.inf, s)
+
+    k = s_out.shape[-1]
+    cat_s = jnp.concatenate([s_out[...], s], axis=-1)
+    cat_i = jnp.concatenate([i_out[...], ids], axis=-1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    s_out[...] = top_s
+    i_out[...] = jnp.take_along_axis(cat_i, pos, axis=-1)

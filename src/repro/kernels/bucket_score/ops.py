@@ -1,0 +1,83 @@
+"""Jit'd public wrapper for the bucket gather-score-merge kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import pad_to, use_interpret
+from .kernel import bucket_score_kernel
+
+__all__ = ["bucket_score"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def bucket_score(
+    queries: jnp.ndarray,        # (nq, D)
+    bucket_data: jnp.ndarray,    # (K, B, D) bucket-major corpus
+    bucket_ids: jnp.ndarray,     # (K, B) int32, -1 padding
+    probes: jnp.ndarray,         # (nq, P) int32 cluster ids
+    *,
+    k: int,
+    exclude: jnp.ndarray | None = None,
+    interpret: bool | None = None,
+):
+    """Cluster-prune inner loop: ``(nq, k)`` scores + ids over probed buckets.
+
+    The probe list rides in as a scalar-prefetch operand, so the bucket block
+    for step ``(q, p)`` is DMA'd ahead of the matmul of step ``(q, p-1)`` —
+    gather latency hides behind MXU work.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    nq, d = queries.shape
+    n_clusters, b, _ = bucket_data.shape
+    p = probes.shape[1]
+    if exclude is None:
+        exclude = jnp.full((nq,), -1, jnp.int32)
+    k_pad = min(pad_to(k, 8), b * p)
+
+    grid = (nq, p)
+    s, i = pl.pallas_call(
+        bucket_score_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda q, pp, pr: (q, 0)),
+                pl.BlockSpec((1, b, d), lambda q, pp, pr: (pr[q, pp], 0, 0)),
+                pl.BlockSpec((1, b), lambda q, pp, pr: (pr[q, pp], 0)),
+                pl.BlockSpec((1, 1), lambda q, pp, pr: (q, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k_pad), lambda q, pp, pr: (q, 0)),
+                pl.BlockSpec((1, k_pad), lambda q, pp, pr: (q, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        probes.astype(jnp.int32),
+        queries,
+        bucket_data,
+        bucket_ids.astype(jnp.int32),
+        exclude.astype(jnp.int32)[:, None],
+    )
+    return s[:, :k], i[:, :k]
+
+
+def pack_bucket_major(docs, buckets):
+    """Host helper: (n, D) corpus + (K, B) id pack -> (K, B, D) bucket-major.
+
+    Padded slots point at row 0 but carry id -1, so kernels mask them.
+    """
+    safe = jnp.where(buckets >= 0, buckets, 0)
+    data = docs[safe]                                  # (K, B, D)
+    return data, jnp.where(buckets >= 0, buckets, -1)

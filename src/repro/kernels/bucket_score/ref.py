@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the bucket gather-score-merge kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucket_score_ref"]
+
+
+def bucket_score_ref(
+    queries: jnp.ndarray,        # (nq, D)
+    bucket_data: jnp.ndarray,    # (K, B, D) bucket-major corpus
+    bucket_ids: jnp.ndarray,     # (K, B) global doc ids, -1 padding
+    probes: jnp.ndarray,         # (nq, P) cluster ids to visit
+    k: int,
+    exclude: jnp.ndarray | None = None,   # (nq,)
+):
+    """Gather all probed buckets, score, dedup by id, exact top-k."""
+    nq = queries.shape[0]
+    data = bucket_data[probes]                      # (nq, P, B, D)
+    ids = bucket_ids[probes].reshape(nq, -1)        # (nq, P*B)
+    s = jnp.einsum(
+        "qpbd,qd->qpb", data, queries, preferred_element_type=jnp.float32
+    ).reshape(nq, -1)
+    s = jnp.where(ids >= 0, s, -jnp.inf)
+    if exclude is not None:
+        s = jnp.where(ids == exclude[:, None], -jnp.inf, s)
+    # dedup identical ids (overlapping clusterings -> identical scores)
+    order = jnp.argsort(ids, axis=-1)
+    ids_s = jnp.take_along_axis(ids, order, axis=-1)
+    s_s = jnp.take_along_axis(s, order, axis=-1)
+    dup = ids_s == jnp.pad(ids_s[:, :-1], ((0, 0), (1, 0)), constant_values=-2)
+    s_s = jnp.where(dup, -jnp.inf, s_s)
+    top_s, pos = jax.lax.top_k(s_s, k)
+    top_i = jnp.take_along_axis(ids_s, pos, axis=-1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    return top_s, top_i

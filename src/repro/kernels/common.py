@@ -1,0 +1,24 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (BlockSpec/VMEM tiling, MXU-aligned shapes) and are
+validated on CPU via ``interpret=True`` — :func:`use_interpret` picks the mode
+from the runtime backend so the same ``ops.py`` entry points run everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["use_interpret", "pad_to", "NEG_INF"]
+
+NEG_INF = float("-inf")
+
+
+def use_interpret() -> bool:
+    """Interpret Pallas on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of ``m``."""
+    return -(-x // m) * m

@@ -1,0 +1,53 @@
+"""EmbeddingBag gather+reduce — the recsys lookup hot path.
+
+JAX has no native EmbeddingBag; the framework-level fallback is
+``jnp.take`` + ``segment_sum`` (see ``ref.py`` / ``repro.models.embedding``).
+On TPU that materialises the gathered ``(B, L, E)`` tensor in HBM. This
+kernel instead streams one embedding ROW per grid step straight from HBM into
+a VMEM accumulator: the bag result ``(1, E)`` is the only thing written back,
+so HBM traffic is ``B·L·E`` reads + ``B·E`` writes (vs ``2·B·L·E + B·E``
+for gather-then-reduce).
+
+Grid: ``(B, L)`` — bag minor-major order; the indices ride in scalar-prefetch
+so row DMA for step ``l+1`` issues while step ``l`` accumulates. Negative
+indices are bag padding (masked). Combiner sum/mean; mean divides by the
+valid count (SMEM scratch) at the last bag slot.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["embed_bag_kernel"]
+
+
+def embed_bag_kernel(
+    idx_ref,      # (B, L) int32 scalar-prefetch — bag indices, -1 padding
+    row_ref,      # (1, E) VMEM — the table row for (b, l)
+    w_ref,        # (B, L) f32 — per-sample weights (all-ones for plain bags)
+    out_ref,      # (1, E) VMEM accumulator — the bag result
+    cnt_ref,      # SMEM (1,) f32 scratch — valid count for mean
+    *,
+    mean: bool,
+):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+    n_l = pl.num_programs(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[0] = 0.0
+
+    valid = idx_ref[b, l] >= 0
+
+    @pl.when(valid)
+    def _acc():
+        out_ref[...] += row_ref[...] * w_ref[b, l]
+        cnt_ref[0] += 1.0
+
+    if mean:
+        @pl.when(l == n_l - 1)
+        def _div():
+            out_ref[...] /= jnp.maximum(cnt_ref[0], 1.0)

@@ -1,0 +1,60 @@
+"""Jit'd wrapper for the EmbeddingBag kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import use_interpret
+from .kernel import embed_bag_kernel
+
+__all__ = ["embed_bag"]
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embed_bag(
+    table: jnp.ndarray,      # (V, E)
+    indices: jnp.ndarray,    # (B, L) int32, -1 padding
+    weights: jnp.ndarray | None = None,   # (B, L) per-sample weights
+    *,
+    combiner: str = "sum",
+    interpret: bool | None = None,
+):
+    """EmbeddingBag: ``(B, E)`` per-bag reduction of table rows.
+
+    Each grid step DMAs exactly one table row (scalar-prefetch indexed) into
+    VMEM and accumulates — the ``(B, L, E)`` gather intermediate never exists.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    if combiner not in ("sum", "mean"):
+        raise ValueError(f"combiner must be sum|mean, got {combiner}")
+    b, l = indices.shape
+    v, e = table.shape
+    if weights is None:
+        weights = jnp.ones((b, l), table.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(embed_bag_kernel, mean=combiner == "mean"),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, l),
+            in_specs=[
+                # clamp padding (-1) to row 0; kernel masks the contribution
+                pl.BlockSpec(
+                    (1, e),
+                    lambda bb, ll, idx: (jnp.maximum(idx[bb, ll], 0), 0),
+                ),
+                pl.BlockSpec((b, l), lambda bb, ll, idx: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, e), lambda bb, ll, idx: (bb, 0)),
+            scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, e), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table, weights.astype(table.dtype))
+    return out

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for EmbeddingBag (the take+segment_sum formulation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embed_bag_ref"]
+
+
+def embed_bag_ref(
+    table: jnp.ndarray,     # (V, E)
+    indices: jnp.ndarray,   # (B, L) int32, -1 padding
+    weights: jnp.ndarray | None = None,   # (B, L)
+    *,
+    combiner: str = "sum",
+):
+    """Gather-then-reduce EmbeddingBag; the system-level fallback path."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)            # (B, L, E)
+    w = jnp.where(valid, 1.0, 0.0).astype(table.dtype)
+    if weights is not None:
+        w = w * weights
+    out = jnp.einsum("ble,bl->be", rows, w)
+    if combiner == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+        out = out / cnt.astype(out.dtype)
+    return out

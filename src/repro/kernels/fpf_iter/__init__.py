@@ -1,0 +1,2 @@
+from .ops import *
+from .ref import *

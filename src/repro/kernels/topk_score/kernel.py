@@ -1,0 +1,54 @@
+"""Streaming fused score+top-k Pallas kernel (brute-force scoring hot path).
+
+The paper's query cost is dominated by dense cosine scoring (leaders, visited
+buckets, and the exhaustive ground-truth baseline). On TPU the natural shape
+is a ``(TQ, D) x (D, TN)`` MXU matmul per grid step with a *running top-k
+merged in VMEM* — the ``(nq, n)`` score matrix never reaches HBM, so the
+memory roofline term drops from ``O(nq·n)`` to ``O(nq·k)`` (DESIGN.md §4).
+
+Grid: ``(nq/TQ, n/TN)`` — doc tiles minor, so the output block for a query
+tile stays resident in VMEM across the whole doc sweep and acts as the
+top-k accumulator (standard TPU revisiting pattern).
+
+VMEM working set per step: ``TQ·D + TN·D + TQ·(K+TN)`` floats; block defaults
+in ``ops.py`` keep this under ~8 MB for D ≤ 8192.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["topk_score_kernel"]
+
+
+def topk_score_kernel(
+    q_ref,       # (TQ, D)  VMEM — query block (weighted, normalised)
+    d_ref,       # (TN, D)  VMEM — doc tile
+    ex_ref,      # (TQ, 1)  VMEM — per-query excluded doc id (or -1)
+    s_out,       # (TQ, K)  VMEM accumulator — running top-k scores
+    i_out,       # (TQ, K)  VMEM accumulator — running top-k doc ids
+    *,
+    n_docs: int,
+    block_n: int,
+):
+    di = pl.program_id(1)
+
+    @pl.when(di == 0)
+    def _init():
+        s_out[...] = jnp.full_like(s_out, -jnp.inf)
+        i_out[...] = jnp.full_like(i_out, -1)
+
+    # (TQ, TN) scores on the MXU, fp32 accumulation regardless of input dtype.
+    s = jnp.dot(q_ref[...], d_ref[...].T, preferred_element_type=jnp.float32)
+    ids = di * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ids < n_docs, s, -jnp.inf)           # doc-padding mask
+    s = jnp.where(ids == ex_ref[...], -jnp.inf, s)     # query-self exclusion
+
+    k = s_out.shape[-1]
+    cat_s = jnp.concatenate([s_out[...], s], axis=-1)
+    cat_i = jnp.concatenate([i_out[...], ids], axis=-1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    s_out[...] = top_s
+    i_out[...] = jnp.take_along_axis(cat_i, pos, axis=-1)

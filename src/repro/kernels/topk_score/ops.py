@@ -1,0 +1,70 @@
+"""Jit'd public wrapper for the streaming score+top-k kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import pad_to, use_interpret
+from .kernel import topk_score_kernel
+
+__all__ = ["topk_score"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_n", "interpret")
+)
+def topk_score(
+    queries: jnp.ndarray,           # (nq, D)
+    docs: jnp.ndarray,              # (n, D)
+    *,
+    k: int,
+    exclude: jnp.ndarray | None = None,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused brute-force top-k: ``(nq, k)`` scores + global doc ids.
+
+    Pads queries/docs to block multiples (scores of padded docs are masked to
+    ``-inf`` inside the kernel via ``n_docs``), sweeps doc tiles in the minor
+    grid dimension, and keeps the running top-k in VMEM.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    nq, d = queries.shape
+    n = docs.shape[0]
+    if exclude is None:
+        exclude = jnp.full((nq,), -1, jnp.int32)
+    block_q = min(block_q, pad_to(nq, 8))
+    block_n = min(block_n, pad_to(n, 128))
+    k_pad = min(pad_to(k, 8), block_n)
+
+    nq_p, n_p = pad_to(nq, block_q), pad_to(n, block_n)
+    q_p = jnp.pad(queries, ((0, nq_p - nq), (0, 0)))
+    d_p = jnp.pad(docs, ((0, n_p - n), (0, 0)))
+    ex_p = jnp.pad(exclude.astype(jnp.int32), (0, nq_p - nq))[:, None]
+
+    grid = (nq_p // block_q, n_p // block_n)
+    s, i = pl.pallas_call(
+        functools.partial(topk_score_kernel, n_docs=n, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, di: (qi, 0)),
+            pl.BlockSpec((block_n, d), lambda qi, di: (di, 0)),
+            pl.BlockSpec((block_q, 1), lambda qi, di: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda qi, di: (qi, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda qi, di: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq_p, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nq_p, k_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_p, d_p, ex_p)
+    return s[:nq, :k], i[:nq, :k]

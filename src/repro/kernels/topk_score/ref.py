@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the streaming score+top-k kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_score_ref"]
+
+
+def topk_score_ref(
+    queries: jnp.ndarray,      # (nq, D)
+    docs: jnp.ndarray,         # (n, D)
+    k: int,
+    exclude: jnp.ndarray | None = None,   # (nq,) doc id or -1
+):
+    """Materialise all scores, mask, exact top-k. (nq, k) scores + ids."""
+    s = jnp.dot(queries, docs.T, preferred_element_type=jnp.float32)
+    ids = jnp.arange(docs.shape[0], dtype=jnp.int32)
+    if exclude is not None:
+        s = jnp.where(ids[None, :] == exclude[:, None], -jnp.inf, s)
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_s, top_i.astype(jnp.int32)

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first — jax locks the device count at
+# first init; everything below (including `from repro...`) may import jax.
+
+_DOC = """Multi-pod dry-run: lower + compile EVERY (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder host devices back the production
+meshes. Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b  # one arch
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape decode_32k --mesh multi --out results/dryrun
+
+Per cell it prints ``compiled.memory_analysis()`` (proves fit) and
+``cost_analysis()`` FLOPs/bytes, parses collective bytes from the optimized
+HLO, computes the three roofline terms (§Roofline) and dumps one JSON per
+(cell, mesh) under ``--out`` for benchmarks/roofline_report.py.
+"""
+__doc__ = _DOC
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+print = functools.partial(print, flush=True)
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCH_IDS, all_cells
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze_compiled
+
+MESHES = {"single": False, "multi": True}
+
+
+def _to_named(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def run_cell(cell, mesh_name: str, out_dir: str | None):
+    multi = MESHES[mesh_name]
+    mesh = make_production_mesh(multi_pod=multi)
+    n_devices = mesh.size
+    t0 = time.time()
+    fn, args, in_shard, out_shard = cell.build(mesh)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            fn,
+            in_shardings=_to_named(in_shard, mesh),
+            out_shardings=_to_named(out_shard, mesh),
+        )
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    report = analyze_compiled(
+        compiled, n_devices=n_devices, model_flops=cell.model_flops or None
+    )
+    if cell.analytic is not None:
+        # scanned (while-loop) programs: HloCostAnalysis visits loop bodies
+        # once, so flops/bytes come from the cell's closed-form model; the
+        # collective term keeps the (trip-count-corrected) HLO parse.
+        from repro.roofline import roofline_terms
+        a = cell.analytic(mesh)
+        report["costanalysis_flops_per_chip"] = report["hlo_flops_per_chip"]
+        report["costanalysis_bytes_per_chip"] = report["hlo_bytes_per_chip"]
+        report["hlo_flops_per_chip"] = a["flops"]
+        report["hlo_bytes_per_chip"] = a["bytes"]
+        report["flops_source"] = "analytic(scan-corrected)"
+        report.update(roofline_terms(
+            flops=a["flops"], bytes_accessed=a["bytes"],
+            collective_bytes=report["collective_bytes_per_chip"],
+            n_devices=n_devices,
+        ))
+        if cell.model_flops:
+            report["useful_flops_ratio"] = cell.model_flops / (a["flops"] * n_devices)
+    report.update(
+        arch=cell.arch, shape=cell.shape, kind=cell.kind, mesh=mesh_name,
+        mesh_shape=dict(mesh.shape), lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2), note=cell.note,
+    )
+    mem = compiled.memory_analysis()
+    print(f"  memory_analysis: {mem}")
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    print(
+        f"  cost_analysis: flops={ca.get('flops', 0):.4g} "
+        f"bytes={ca.get('bytes accessed', 0):.4g}"
+    )
+    print(
+        f"  roofline: compute={report['t_compute_s']:.3e}s "
+        f"memory={report['t_memory_s']:.3e}s "
+        f"collective={report['t_collective_s']:.3e}s "
+        f"-> {report['bottleneck']}-bound "
+        f"(frac={report['roofline_fraction']:.3f})"
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{cell.arch}__{cell.shape}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all")
+    ap.add_argument("--shape", default=None, help="only this shape cell")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--keep-going", action="store_true", default=True)
+    args = ap.parse_args()
+
+    archs = args.arch or list(ARCH_IDS)
+    cells = [
+        c for c in all_cells(archs)
+        if args.shape is None or c.shape == args.shape
+    ]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures, n_ok = [], 0
+    for cell in cells:
+        for mesh_name in meshes:
+            print(f"[dryrun] {cell.name} on {mesh_name} "
+                  f"({'2x16x16' if mesh_name == 'multi' else '16x16'})")
+            try:
+                run_cell(cell, mesh_name, args.out)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((cell.name, mesh_name, repr(e)))
+                traceback.print_exc()
+                if not args.keep_going:
+                    raise
+    print(f"\n[dryrun] {n_ok} ok, {len(failures)} failed")
+    for name, mesh_name, err in failures:
+        print(f"  FAIL {name} [{mesh_name}]: {err[:200]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

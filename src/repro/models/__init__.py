@@ -1,0 +1,9 @@
+"""Assigned-architecture model zoo (DESIGN.md §5).
+
+transformer  dense + MoE decoder LMs (5 assigned LM archs)
+gnn          GCN via segment_sum message passing (gcn-cora)
+recsys       DLRM / BST / AutoInt / MIND + retrieval scoring
+embedding    sharded embedding tables + EmbeddingBag substrate
+"""
+
+from . import embedding, gnn, recsys, transformer

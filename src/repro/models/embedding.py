@@ -1,0 +1,113 @@
+"""Sharded embedding tables + EmbeddingBag (the recsys substrate).
+
+JAX has no native EmbeddingBag and no CSR — per the task spec we build it:
+``jnp.take`` + masked reduce (XLA path, SPMD-shardable for the dry-run), with
+the Pallas ``repro.kernels.embed_bag`` kernel as the single-device TPU fast
+path. Sharding strategy (DESIGN.md §6):
+
+* tables above ``row_shard_threshold`` rows are ROW-sharded over the
+  ``model`` axis (and ``pod`` for the biggest): a lookup becomes
+  gather-local + mask + psum under SPMD;
+* small tables are replicated (gather is free, no collective).
+
+``MultiTable`` packs the per-field vocabularies of DLRM/AutoInt-style models
+(26–39 fields with wildly different vocab sizes) into one padded
+``(F, V_max, E)`` tensor when sizes are close, or keeps a dict of arrays when
+they are not (both supported; configs choose).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "EmbedTablesConfig",
+    "table_specs",
+    "table_shardings",
+    "init_tables",
+    "lookup",
+    "embed_bag_jax",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedTablesConfig:
+    vocab_sizes: tuple[int, ...]
+    embed_dim: int
+    dtype = jnp.float32
+    row_shard_threshold: int = 262_144   # rows; above this -> row-sharded
+
+
+def table_specs(cfg: EmbedTablesConfig):
+    return {
+        f"table_{i}": jax.ShapeDtypeStruct((v, cfg.embed_dim), cfg.dtype)
+        for i, v in enumerate(cfg.vocab_sizes)
+    }
+
+
+def table_shardings(cfg: EmbedTablesConfig, *, model_axes=("model",)):
+    """PartitionSpec per table: row-sharded if big, replicated if small."""
+    from jax.sharding import PartitionSpec as P
+
+    out = {}
+    for i, v in enumerate(cfg.vocab_sizes):
+        if v >= cfg.row_shard_threshold:
+            out[f"table_{i}"] = P(tuple(model_axes), None)
+        else:
+            out[f"table_{i}"] = P(None, None)
+    return out
+
+
+def init_tables(cfg: EmbedTablesConfig, key: jax.Array):
+    keys = jax.random.split(key, len(cfg.vocab_sizes))
+    return {
+        f"table_{i}": (
+            jax.random.normal(k, (v, cfg.embed_dim), jnp.float32)
+            * cfg.embed_dim ** -0.5
+        ).astype(cfg.dtype)
+        for i, (v, k) in enumerate(zip(cfg.vocab_sizes, keys))
+    }
+
+
+def lookup(tables: dict, ids: jnp.ndarray):
+    """Per-field single-id lookup. ids (B, F) -> (B, F, E).
+
+    Under pjit with row-sharded tables XLA lowers each gather to
+    local-gather + select + all-reduce; small replicated tables gather free.
+    """
+    cols = [
+        jnp.take(tables[f"table_{i}"], ids[:, i], axis=0)
+        for i in range(ids.shape[1])
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+def embed_bag_jax(
+    table: jnp.ndarray,      # (V, E)
+    indices: jnp.ndarray,    # (B, L) int32, -1 padding
+    weights: jnp.ndarray | None = None,
+    *,
+    combiner: str = "sum",
+):
+    """EmbeddingBag, XLA formulation (= kernels/embed_bag/ref oracle)."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)             # (B, L, E)
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = jnp.einsum(
+        "ble,bl->be", rows, w, preferred_element_type=jnp.float32
+    ).astype(table.dtype)
+    if combiner == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+        out = out / cnt.astype(out.dtype)
+    return out
+
+
+def total_rows(cfg: EmbedTablesConfig) -> int:
+    return int(np.sum(cfg.vocab_sizes))

@@ -1,0 +1,438 @@
+"""The four assigned recsys architectures: DLRM, BST, AutoInt, MIND.
+
+All share the sharded-embedding substrate (``repro.models.embedding``) and a
+BCE objective; each has its own interaction op (the family's defining piece):
+
+* **DLRM** [arXiv:1906.00091, MLPerf config]: bottom MLP on 13 dense feats,
+  26 embedding lookups (dim 128), **dot interaction** (pairwise dots of the
+  27 feature vectors + the dense vector), top MLP -> logit.
+* **BST**  [arXiv:1905.06874]: item+position embeddings, ONE transformer
+  block (8 heads) over [history(20), target], flatten -> 1024-512-256 MLP.
+* **AutoInt** [arXiv:1810.11921]: 39 field embeddings (dim 16), 3 stacked
+  multi-head self-attention interacting layers (2 heads, d_attn 32) with
+  residuals, flatten -> logit.
+* **MIND** [arXiv:1904.08030]: behavior->interest **capsule routing**
+  (4 interest capsules, 3 dynamic-routing iterations, squash nonlinearity),
+  label-aware attention at training; at serving the 4 interests are exactly
+  ``s=4`` sources of evidence for the paper's dynamic weighted aggregation
+  (DESIGN.md §5 — the paper-representative cell).
+
+Retrieval scoring (the ``retrieval_cand`` cells) goes through
+:func:`retrieval_scores` — one batched matmul against the candidate item
+table — or through the paper's FPF cluster-pruned index (examples/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedding import EmbedTablesConfig, embed_bag_jax, init_tables, lookup, table_specs
+
+__all__ = [
+    "DLRMConfig", "BSTConfig", "AutoIntConfig", "MINDConfig",
+    "dlrm_param_specs", "dlrm_init", "dlrm_forward", "dlrm_loss",
+    "bst_param_specs", "bst_init", "bst_forward", "bst_loss",
+    "autoint_param_specs", "autoint_init", "autoint_forward", "autoint_loss",
+    "mind_param_specs", "mind_init", "mind_interests", "mind_loss",
+    "retrieval_scores", "bce_with_logits",
+]
+
+
+def bce_with_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def _mlp_specs(dims, dtype, prefix):
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"{prefix}_w{i}"] = jax.ShapeDtypeStruct((a, b), dtype)
+        out[f"{prefix}_b{i}"] = jax.ShapeDtypeStruct((b,), dtype)
+    return out
+
+
+def _mlp_apply(params, x, n, prefix, final_act=False):
+    for i in range(n):
+        x = jnp.einsum(
+            "...a,ab->...b", x, params[f"{prefix}_w{i}"],
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype) + params[f"{prefix}_b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _init_from_specs(specs, key, d_scale=None):
+    keys = jax.random.split(key, len(specs))
+    out = {}
+    for (name, spec), k in zip(sorted(specs.items()), keys):
+        if "_b" in name or name.endswith("bias"):
+            out[name] = jnp.zeros(spec.shape, spec.dtype)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) >= 2 else 1
+            out[name] = (
+                jax.random.normal(k, spec.shape, jnp.float32)
+                * (1.0 / max(fan_in, 1)) ** 0.5
+            ).astype(spec.dtype)
+    return out
+
+
+# ----------------------------------------------------------------------- DLRM
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: tuple[int, ...] = ()
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp_hidden: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def tables(self) -> EmbedTablesConfig:
+        return EmbedTablesConfig(self.vocab_sizes, self.embed_dim)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_mlp(self) -> tuple[int, ...]:
+        return (self.n_interact + self.embed_dim,) + self.top_mlp_hidden
+
+
+def dlrm_param_specs(cfg: DLRMConfig):
+    specs = table_specs(cfg.tables)
+    specs |= _mlp_specs(cfg.bot_mlp, cfg.dtype, "bot")
+    specs |= _mlp_specs(cfg.top_mlp, cfg.dtype, "top")
+    return specs
+
+
+def dlrm_init(cfg: DLRMConfig, key: jax.Array):
+    k1, k2 = jax.random.split(key)
+    p = _init_from_specs(
+        _mlp_specs(cfg.bot_mlp, cfg.dtype, "bot")
+        | _mlp_specs(cfg.top_mlp, cfg.dtype, "top"),
+        k1,
+    )
+    p |= init_tables(cfg.tables, k2)
+    return p
+
+
+def dlrm_forward(params, dense, sparse, cfg: DLRMConfig):
+    """dense (B, 13), sparse (B, F) or (B, F, M) multi-hot -> logit (B,)."""
+    x = _mlp_apply(params, dense.astype(cfg.dtype), len(cfg.bot_mlp) - 1,
+                   "bot", final_act=True)                      # (B, E)
+    if sparse.ndim == 3 and sparse.shape[-1] > 1:
+        cols = [
+            embed_bag_jax(params[f"table_{i}"], sparse[:, i], combiner="sum")
+            for i in range(cfg.n_sparse)
+        ]
+        emb = jnp.stack(cols, axis=1)
+    else:
+        ids = sparse[..., 0] if sparse.ndim == 3 else sparse
+        emb = lookup(params, ids)                               # (B, F, E)
+    feats = jnp.concatenate([x[:, None, :], emb], axis=1)       # (B, F+1, E)
+    # dot interaction: strictly-lower-triangular entries of feats @ feats^T
+    z = jnp.einsum(
+        "bfe,bge->bfg", feats, feats, preferred_element_type=jnp.float32
+    )
+    f = feats.shape[1]
+    iu, ju = np.tril_indices(f, k=-1)
+    inter = z[:, iu, ju].astype(cfg.dtype)                      # (B, F(F-1)/2)
+    top_in = jnp.concatenate([inter, x], axis=-1)
+    return _mlp_apply(params, top_in, len(cfg.top_mlp) - 1, "top")[:, 0]
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig):
+    logit = dlrm_forward(params, batch["dense"], batch["sparse"], cfg)
+    return bce_with_logits(logit, batch["label"])
+
+
+# ------------------------------------------------------------------------ BST
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 4_000_000
+    embed_dim: int = 32
+    seq_len: int = 20            # history length; sequence is hist + target
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    dtype = jnp.float32
+
+    @property
+    def full_seq(self) -> int:
+        return self.seq_len + 1
+
+
+def bst_param_specs(cfg: BSTConfig):
+    e = cfg.embed_dim
+    specs = {
+        "item_emb": jax.ShapeDtypeStruct((cfg.n_items, e), cfg.dtype),
+        "pos_emb": jax.ShapeDtypeStruct((cfg.full_seq, e), cfg.dtype),
+    }
+    for b in range(cfg.n_blocks):
+        specs |= {
+            f"blk{b}_wq": jax.ShapeDtypeStruct((e, e), cfg.dtype),
+            f"blk{b}_wk": jax.ShapeDtypeStruct((e, e), cfg.dtype),
+            f"blk{b}_wv": jax.ShapeDtypeStruct((e, e), cfg.dtype),
+            f"blk{b}_wo": jax.ShapeDtypeStruct((e, e), cfg.dtype),
+            f"blk{b}_ln1": jax.ShapeDtypeStruct((e,), cfg.dtype),
+            f"blk{b}_ln2": jax.ShapeDtypeStruct((e,), cfg.dtype),
+            f"blk{b}_ff_w0": jax.ShapeDtypeStruct((e, 4 * e), cfg.dtype),
+            f"blk{b}_ff_b0": jax.ShapeDtypeStruct((4 * e,), cfg.dtype),
+            f"blk{b}_ff_w1": jax.ShapeDtypeStruct((4 * e, e), cfg.dtype),
+            f"blk{b}_ff_b1": jax.ShapeDtypeStruct((e,), cfg.dtype),
+        }
+    dims = (cfg.full_seq * e,) + cfg.mlp + (1,)
+    specs |= _mlp_specs(dims, cfg.dtype, "head")
+    return specs
+
+
+def bst_init(cfg: BSTConfig, key: jax.Array):
+    p = _init_from_specs(bst_param_specs(cfg), key)
+    for b in range(cfg.n_blocks):
+        p[f"blk{b}_ln1"] = jnp.ones_like(p[f"blk{b}_ln1"])
+        p[f"blk{b}_ln2"] = jnp.ones_like(p[f"blk{b}_ln2"])
+    return p
+
+
+def _layernorm(x, scale):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * scale
+
+
+def _mha(x, wq, wk, wv, wo, n_heads):
+    b, s, e = x.shape
+    dh = e // n_heads
+    q = (x @ wq).reshape(b, s, n_heads, dh)
+    k = (x @ wk).reshape(b, s, n_heads, dh)
+    v = (x @ wv).reshape(b, s, n_heads, dh)
+    sc = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * dh ** -0.5
+    pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, v).reshape(b, s, e)
+    return o @ wo
+
+
+def bst_forward(params, hist, target, cfg: BSTConfig):
+    """hist (B, L) item ids (-1 pad), target (B,) -> logit (B,)."""
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)      # (B, L+1)
+    valid = seq >= 0
+    emb = jnp.take(params["item_emb"], jnp.where(valid, seq, 0), axis=0)
+    emb = jnp.where(valid[..., None], emb, 0).astype(cfg.dtype)
+    x = emb + params["pos_emb"][None]
+    for bk in range(cfg.n_blocks):
+        h = _mha(
+            _layernorm(x, params[f"blk{bk}_ln1"]),
+            params[f"blk{bk}_wq"], params[f"blk{bk}_wk"],
+            params[f"blk{bk}_wv"], params[f"blk{bk}_wo"], cfg.n_heads,
+        )
+        x = x + h
+        h = _layernorm(x, params[f"blk{bk}_ln2"])
+        h = jax.nn.leaky_relu(h @ params[f"blk{bk}_ff_w0"] + params[f"blk{bk}_ff_b0"])
+        x = x + (h @ params[f"blk{bk}_ff_w1"] + params[f"blk{bk}_ff_b1"])
+    flat = x.reshape(x.shape[0], -1)
+    return _mlp_apply(params, flat, len(cfg.mlp) + 1, "head")[:, 0]
+
+
+def bst_loss(params, batch, cfg: BSTConfig):
+    logit = bst_forward(params, batch["hist"], batch["target"], cfg)
+    return bce_with_logits(logit, batch["label"])
+
+
+# -------------------------------------------------------------------- AutoInt
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    vocab_sizes: tuple[int, ...] = (100_000,) * 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def tables(self) -> EmbedTablesConfig:
+        return EmbedTablesConfig(self.vocab_sizes, self.embed_dim)
+
+
+def autoint_param_specs(cfg: AutoIntConfig):
+    specs = table_specs(cfg.tables)
+    d_in = cfg.embed_dim
+    for l in range(cfg.n_attn_layers):
+        specs |= {
+            f"attn{l}_wq": jax.ShapeDtypeStruct((d_in, cfg.d_attn), cfg.dtype),
+            f"attn{l}_wk": jax.ShapeDtypeStruct((d_in, cfg.d_attn), cfg.dtype),
+            f"attn{l}_wv": jax.ShapeDtypeStruct((d_in, cfg.d_attn), cfg.dtype),
+            f"attn{l}_wres": jax.ShapeDtypeStruct((d_in, cfg.d_attn), cfg.dtype),
+        }
+        d_in = cfg.d_attn
+    specs["out_w"] = jax.ShapeDtypeStruct(
+        (cfg.n_fields * cfg.d_attn, 1), cfg.dtype
+    )
+    specs["out_b"] = jax.ShapeDtypeStruct((1,), cfg.dtype)
+    return specs
+
+
+def autoint_init(cfg: AutoIntConfig, key: jax.Array):
+    k1, k2 = jax.random.split(key)
+    p = _init_from_specs(
+        {k: v for k, v in autoint_param_specs(cfg).items()
+         if not k.startswith("table_")},
+        k1,
+    )
+    p |= init_tables(cfg.tables, k2)
+    return p
+
+
+def autoint_forward(params, sparse, cfg: AutoIntConfig):
+    """sparse (B, F) field ids -> logit (B,)."""
+    x = lookup(params, sparse).astype(cfg.dtype)               # (B, F, E)
+    h = cfg.n_heads
+    for l in range(cfg.n_attn_layers):
+        dh = cfg.d_attn // h
+        q = (x @ params[f"attn{l}_wq"]).reshape(*x.shape[:2], h, dh)
+        k = (x @ params[f"attn{l}_wk"]).reshape(*x.shape[:2], h, dh)
+        v = (x @ params[f"attn{l}_wv"]).reshape(*x.shape[:2], h, dh)
+        sc = jnp.einsum(
+            "bfhd,bghd->bhfg", q, k, preferred_element_type=jnp.float32
+        ) * dh ** -0.5
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhfg,bghd->bfhd", pr, v)
+        o = o.reshape(*x.shape[:2], cfg.d_attn)
+        x = jax.nn.relu(o + x @ params[f"attn{l}_wres"])
+    flat = x.reshape(x.shape[0], -1)
+    return (flat @ params["out_w"] + params["out_b"])[:, 0]
+
+
+def autoint_loss(params, batch, cfg: AutoIntConfig):
+    logit = autoint_forward(params, batch["sparse"], cfg)
+    return bce_with_logits(logit, batch["label"])
+
+
+# ----------------------------------------------------------------------- MIND
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 2.0           # label-aware attention sharpness
+    dtype = jnp.float32
+
+
+def mind_param_specs(cfg: MINDConfig):
+    e = cfg.embed_dim
+    return {
+        "item_emb": jax.ShapeDtypeStruct((cfg.n_items, e), cfg.dtype),
+        "bilinear": jax.ShapeDtypeStruct((e, e), cfg.dtype),   # B2I map S
+    }
+
+
+def mind_init(cfg: MINDConfig, key: jax.Array):
+    k1, k2 = jax.random.split(key)
+    e = cfg.embed_dim
+    return {
+        "item_emb": (
+            jax.random.normal(k1, (cfg.n_items, e), jnp.float32) * e ** -0.5
+        ).astype(cfg.dtype),
+        "bilinear": (
+            jax.random.normal(k2, (e, e), jnp.float32) * e ** -0.5
+        ).astype(cfg.dtype),
+    }
+
+
+def _squash(s):
+    n2 = jnp.sum(jnp.square(s), -1, keepdims=True)
+    return (n2 / (1.0 + n2)) * s * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist, cfg: MINDConfig):
+    """Dynamic-routing B2I capsules. hist (B, L) -> interests (B, K, E).
+
+    Routing logits are a FIXED random init (per the paper) updated by
+    agreement for ``capsule_iters`` rounds; only the bilinear map is learned.
+    """
+    b, l = hist.shape
+    valid = hist >= 0
+    emb = jnp.take(params["item_emb"], jnp.where(valid, hist, 0), axis=0)
+    emb = jnp.where(valid[..., None], emb, 0).astype(cfg.dtype)
+    u_hat = emb @ params["bilinear"]                            # (B, L, E)
+
+    logits = jax.random.normal(
+        jax.random.PRNGKey(17), (1, cfg.n_interests, l), jnp.float32
+    )
+    logits = jnp.broadcast_to(logits, (b, cfg.n_interests, l))
+    u_stop = jax.lax.stop_gradient(u_hat)
+    for it in range(cfg.capsule_iters):
+        c = jax.nn.softmax(logits, axis=1)                      # over interests
+        c = c * valid[:, None, :]                               # drop padding
+        u = u_hat if it == cfg.capsule_iters - 1 else u_stop
+        s = jnp.einsum(
+            "bkl,ble->bke", c.astype(u.dtype), u,
+            preferred_element_type=jnp.float32,
+        )
+        v = _squash(s)                                          # (B, K, E)
+        if it < cfg.capsule_iters - 1:
+            logits = logits + jnp.einsum(
+                "bke,ble->bkl", v.astype(u_stop.dtype), u_stop,
+                preferred_element_type=jnp.float32,
+            )
+    return v.astype(cfg.dtype)
+
+
+def mind_loss(params, batch, cfg: MINDConfig):
+    """Label-aware attention training: attend interests by the target item."""
+    interests = mind_interests(params, batch["hist"], cfg)     # (B, K, E)
+    tgt = jnp.take(params["item_emb"], batch["target"], axis=0)  # (B, E)
+    att = jnp.einsum(
+        "bke,be->bk", interests, tgt, preferred_element_type=jnp.float32
+    )
+    w = jax.nn.softmax(cfg.pow_p * att, axis=-1)
+    user = jnp.einsum("bk,bke->be", w.astype(cfg.dtype), interests)
+    logit = jnp.sum(user * tgt, axis=-1)
+    return bce_with_logits(logit, batch["label"])
+
+
+# ------------------------------------------------------------------ retrieval
+def retrieval_scores(user_vecs, item_table, *, weights=None):
+    """Score user vector(s) against every candidate item (retrieval_cand).
+
+    user_vecs (B, E) or (B, K, E) multi-interest; weights (B, K) optional
+    dynamic interest weights (the paper's aggregation, reduced per §4).
+    Returns (B, n_items) scores — feed to top-k or the cluster-prune index.
+    """
+    if user_vecs.ndim == 2:
+        return jnp.einsum(
+            "be,ne->bn", user_vecs, item_table,
+            preferred_element_type=jnp.float32,
+        )
+    s = jnp.einsum(
+        "bke,ne->bkn", user_vecs, item_table,
+        preferred_element_type=jnp.float32,
+    )
+    if weights is None:
+        return jnp.max(s, axis=1)          # MIND serving default: max-sim
+    return jnp.einsum("bk,bkn->bn", weights.astype(s.dtype), s)

@@ -1,0 +1,696 @@
+"""Decoder-only LM family: dense + MoE, GQA, RoPE, qk-norm, SwiGLU/ReLU².
+
+Covers all five assigned LM architectures (llama4-maverick, qwen2-moe,
+mistral-large-123b, minitron-8b, qwen3-8b) from one config. Design points:
+
+* **stacked layer params + ``lax.scan``** — HLO stays O(1) in depth, which is
+  what makes the 88-layer/123B dry-runs compile in minutes on one CPU core;
+* **blockwise (flash-style) attention** in pure ``jax.lax`` — the (S, S)
+  score matrix never materialises; with ``jax.checkpoint`` on each layer the
+  backward pass recomputes blocks (flash backward);
+* **decode path** with a functional KV cache; attention over the cache is
+  written so XLA SPMD turns sequence-sharded KV into flash-decoding
+  (partial softmax + tiny all-reduces) — see DESIGN.md §6;
+* **MoE** via sort-based capacity dispatch (scatter into an ``(E, C, D)``
+  buffer, dense expert einsum, gather+combine) — no ``(T, E, C)`` one-hot,
+  FLOPs ≈ ``capacity_factor`` × active-expert FLOPs, expert-parallel over
+  the ``model`` mesh axis;
+* fp32 accumulation everywhere (``preferred_element_type``), bf16 storage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MoEConfig",
+    "TransformerConfig",
+    "init_params",
+    "param_specs",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "cache_specs",
+    "prefill",
+    "decode_step",
+    "blockwise_attention",
+    "decode_attention",
+    "moe_ffn",
+    "dense_ffn",
+    "rmsnorm",
+    "rope",
+    "count_params",
+]
+
+
+# --------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8               # routed experts (padded to mesh multiple)
+    top_k: int = 1
+    d_expert: int = 1408             # per-expert FFN width
+    n_shared: int = 0                # shared-expert multiplier (0 = none)
+    moe_every: int = 1               # MoE layer every N layers (1 = all)
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    qk_norm: bool = False
+    mlp_type: str = "swiglu"         # swiglu | relu2
+    moe: MoEConfig | None = None
+    rope_theta: float = 10_000.0
+    dtype: Any = jnp.float32         # param/activation storage dtype
+    remat: bool = True
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    # sequence-sharded KV decode (long-context cells): mesh axis that shards
+    # the cache length dim; attention math is written to reduce over it.
+    max_seq_len: int = 4096
+
+    @property
+    def n_q_per_kv(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+# --------------------------------------------------------------------- layers
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _qk_norm(x, scale):
+    """Per-head RMS norm of q/k (Qwen3). x: (..., H, dh), scale: (dh,)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + 1e-6).astype(x.dtype)) * scale
+
+
+def blockwise_attention(q, k, v, *, q_chunk, kv_chunk, causal=True):
+    """Flash-style attention, O(S·chunk) memory. q (B,S,Hq,dh), kv (B,T,Hk,dh).
+
+    Outer scan over q blocks, inner scan over kv blocks with running
+    (max, denom, acc) in fp32. GQA folded as (Hk, G).
+    """
+    b, s, hq, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    # pad to chunk multiples; padded kv columns sit beyond every causal cone
+    # (k_pos >= s > q_pos) and padded q rows are sliced off at the end
+    s_orig = s
+    s_pad = (-s) % q_chunk
+    t_pad = (-t) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        s += s_pad
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        t += t_pad
+    nq, nk = s // q_chunk, t // kv_chunk
+
+    qr = q.reshape(b, nq, q_chunk, hk, g, dh)
+    kr = k.reshape(b, nk, kv_chunk, hk, dh)
+    vr = v.reshape(b, nk, kv_chunk, hk, dh)
+
+    def q_block(qi):
+        qb = qr[:, qi] * scale                                # (B,Qc,Hk,G,dh)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb, vb = kr[:, ki], vr[:, ki]
+            sblk = jnp.einsum(
+                "bqkgd,btkd->bkgqt", qb, kb,
+                preferred_element_type=jnp.float32,
+            )                                                  # (B,Hk,G,Qc,Tc)
+            if causal:
+                k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                sblk = jnp.where(mask, sblk, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(sblk, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sblk - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hk, g, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hk, g, q_chunk), jnp.float32),
+            jnp.zeros((b, hk, g, q_chunk, dh), jnp.float32),
+        )
+        # NOTE: causal blocks above the diagonal are fully masked but still
+        # scanned — the §Perf hillclimb replaces this with a bounded scan.
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)                             # (B,Hk,G,Qc,dh)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))                # (nq,B,Hk,G,Qc,dh)
+    outs = jnp.moveaxis(outs, 0, 3)                            # (B,Hk,G,nq,Qc,dh)
+    out = outs.reshape(b, hk * g, s, dh).transpose(0, 2, 1, 3)
+    return out[:, :s_orig]
+
+
+def decode_attention(q, ck, cv, length):
+    """One-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, Hq, dh); ck/cv: (B, S, Hk, dh); length: () current cache fill.
+    Written as plain reductions over S so XLA SPMD lowers a sequence-sharded
+    cache to flash-decoding (partial max/sum + all-reduce of (B,H[,dh])).
+    """
+    b, s, hk, dh = ck.shape
+    hq = q.shape[2]
+    g = hq // hk
+    qr = q.reshape(b, hk, g, dh) * dh ** -0.5
+    scores = jnp.einsum(
+        "bkgd,btkd->bkgt", qr, ck, preferred_element_type=jnp.float32
+    )                                                          # (B,Hk,G,S)
+    pos = jnp.arange(s)
+    scores = jnp.where(pos[None, None, None, :] < length, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd", (p / l).astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_ffn(x2d, p, cfg: TransformerConfig, mcfg: MoEConfig):
+    """Sort-based capacity-dispatch MoE. x2d: (T, D) -> (T, D), aux loss ().
+
+    1. router top-k, softmax gates;
+    2. flatten (T·k) slots, sort by expert, position-in-expert by running
+       offset, drop beyond capacity;
+    3. scatter into (E, C, D), two dense expert einsums, gather+combine.
+    """
+    t, d = x2d.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    cap = int(np.ceil(t * k * mcfg.capacity_factor / e))
+    cap = max(8, -(-cap // 8) * 8)
+
+    logits = jnp.einsum(
+        "td,de->te", x2d, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                     # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * P_e
+    f = jnp.mean(
+        jax.nn.one_hot(expert[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    aux = mcfg.aux_coef * e * jnp.sum(f * jnp.mean(probs, axis=0))
+
+    # --- dispatch bookkeeping (ints only; no gradient path)
+    slot_e = expert.reshape(-1)                                # (T*k,)
+    order = jnp.argsort(slot_e)                                # stable
+    se_sorted = slot_e[order]
+    starts = jnp.cumsum(jnp.bincount(se_sorted, length=e)) - jnp.bincount(
+        se_sorted, length=e
+    )
+    pos_sorted = jnp.arange(t * k) - starts[se_sorted]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < cap                                           # capacity drop
+
+    tok = jnp.arange(t * k) // k
+    buf = jnp.zeros((e, cap, d), x2d.dtype)
+    buf = buf.at[
+        jnp.where(keep, slot_e, e - 1),
+        jnp.where(keep, pos, cap - 1),
+    ].add(jnp.where(keep[:, None], x2d[tok], 0))
+
+    # --- expert FFN (dense over (E, C))
+    h1 = jnp.einsum(
+        "ecd,edf->ecf", buf, p["w1"], preferred_element_type=jnp.float32
+    )
+    if cfg.mlp_type == "swiglu":
+        h3 = jnp.einsum(
+            "ecd,edf->ecf", buf, p["w3"], preferred_element_type=jnp.float32
+        )
+        h = jax.nn.silu(h1) * h3
+    else:
+        h = jnp.square(jax.nn.relu(h1))
+    out_buf = jnp.einsum(
+        "ecf,efd->ecd", h.astype(x2d.dtype), p["w2"],
+        preferred_element_type=jnp.float32,
+    ).astype(x2d.dtype)
+
+    # --- combine (clamp dropped slots; their weight is zeroed by `keep`)
+    y_slots = out_buf[slot_e, jnp.minimum(pos, cap - 1)] * (
+        gate.reshape(-1, 1) * keep[:, None]
+    )
+    y = jnp.sum(y_slots.reshape(t, k, d), axis=1).astype(x2d.dtype)
+
+    if mcfg.n_shared > 0:
+        sh = dense_ffn(x2d, p["shared"], cfg)
+        y = y + sh
+    return y.astype(x2d.dtype), aux
+
+
+def dense_ffn(x, p, cfg: TransformerConfig):
+    h1 = jnp.einsum(
+        "...d,df->...f", x, p["w1"], preferred_element_type=jnp.float32
+    )
+    if cfg.mlp_type == "swiglu":
+        h3 = jnp.einsum(
+            "...d,df->...f", x, p["w3"], preferred_element_type=jnp.float32
+        )
+        h = jax.nn.silu(h1) * h3
+    else:
+        h = jnp.square(jax.nn.relu(h1))
+    return jnp.einsum(
+        "...f,fd->...d", h.astype(x.dtype), p["w2"],
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- layer/model
+def _attn_proj(x, p, cfg):
+    """qkv projections + RoPE + optional qk-norm. x: (B, S, D)."""
+    b, s, _ = x.shape
+    q = jnp.einsum(
+        "bsd,dhe->bshe", x, p["wq"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    k = jnp.einsum(
+        "bsd,dhe->bshe", x, p["wk"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    v = jnp.einsum(
+        "bsd,dhe->bshe", x, p["wv"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"])
+        k = _qk_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def layer_fn(p, x, cfg: TransformerConfig, positions, use_moe: bool):
+    """One transformer (sub)layer. x: (B, S, D). ``use_moe`` is static."""
+    h = rmsnorm(x, p["ln1"])
+    q, k, v = _attn_proj(h, p, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    att = blockwise_attention(
+        q, k, v, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk
+    )
+    att = jnp.einsum(
+        "bshe,hed->bsd", att, p["wo"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    x = x + att
+
+    h = rmsnorm(x, p["ln2"])
+    if use_moe:
+        b, s, d = h.shape
+        y, aux = moe_ffn(h.reshape(-1, d), p["moe"], cfg, cfg.moe)
+        y = y.reshape(b, s, d)
+    else:
+        y = dense_ffn(h, p["mlp"], cfg)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux, (k, v)
+
+
+def _n_sub(cfg: TransformerConfig) -> int:
+    """Sublayers per scanned block: moe_every (the MoE interleave period)."""
+    return cfg.moe.moe_every if cfg.moe is not None else 1
+
+
+def _sub_uses_moe(cfg: TransformerConfig, i: int) -> bool:
+    """Sublayer i of a block is the MoE one iff it is the last of the period
+    (the Llama-4 interleave: dense, MoE, dense, MoE, ...)."""
+    return cfg.moe is not None and i == _n_sub(cfg) - 1
+
+
+def block_fn(p_block, x, cfg: TransformerConfig, positions):
+    """One scanned block = ``moe_every`` consecutive sublayers.
+
+    Keeps the stacked-parameter scan O(1)-deep in HLO while letting MoE
+    layers interleave with dense ones WITHOUT allocating expert weights for
+    every layer (48 x experts would double llama4's 400B to 790B)."""
+    aux = jnp.zeros((), jnp.float32)
+    kvs = []
+    for i in range(_n_sub(cfg)):
+        x, a, kv = layer_fn(
+            p_block[f"sub{i}"], x, cfg, positions, _sub_uses_moe(cfg, i)
+        )
+        aux = aux + a
+        kvs.append(kv)
+    return x, aux, kvs
+
+
+def _constrain(tree, use_specs):
+    """ZeRO-3 weight gather: constrain stored-sharded params to their USE
+    sharding (TP-only) right before use. XLA inserts the all-gather here and
+    the transpose reduce-scatters the gradient back to the stored layout —
+    without this, SPMD treats FSDP's contracting-dim sharding as tensor
+    parallelism and all-reduces full activations (seen in dry-runs:
+    f32[64,4096,768] all-reduces x144; DESIGN.md §6)."""
+    if use_specs is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, use_specs
+    )
+
+
+def forward(params, tokens, cfg: TransformerConfig, use_specs=None):
+    """Training/prefill forward. tokens (B, S) -> (logits (B,S,V), aux).
+
+    ``use_specs``: optional {"layers": pytree of PartitionSpec (per-layer,
+    no stacked dim), "unembed": PartitionSpec} — the TP-only use shardings
+    (see :func:`_constrain`).
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    layer_specs = use_specs.get("layers") if use_specs else None
+    res_spec = use_specs.get("residual") if use_specs else None
+
+    def body(carry, p_blk):
+        x, aux = carry
+
+        def run(p_blk, x):
+            y, a, kv = block_fn(
+                _constrain(p_blk, layer_specs), x, cfg, positions
+            )
+            if res_spec is not None:
+                # Megatron-SP: residual stream stored sequence-sharded over
+                # 'model' between blocks — XLA lowers the TP psum pair to
+                # reduce-scatter + all-gather (half the bytes of all-reduce)
+                y = jax.lax.with_sharding_constraint(y, res_spec)
+            return y, a, kv
+
+        if cfg.remat:
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, a, _ = run(p_blk, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+    )
+    x = rmsnorm(x, params["ln_f"])
+    unembed = params["unembed"]
+    if use_specs and "unembed" in use_specs:
+        unembed = _constrain(unembed, use_specs["unembed"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, unembed, preferred_element_type=jnp.float32
+    )
+    return logits, aux
+
+
+def loss_fn(params, tokens, labels, cfg: TransformerConfig, use_specs=None):
+    """Mean next-token cross-entropy (+ MoE aux). labels -1 = masked."""
+    logits, aux = forward(params, tokens, cfg, use_specs)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode path
+def init_cache(cfg: TransformerConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.max_seq_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.max_seq_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: TransformerConfig, use_specs=None):
+    """Run the prompt, return last-position logits + a filled cache."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = init_cache(cfg, b)
+    layer_specs = use_specs.get("layers") if use_specs else None
+
+    def body(carry, p_blk):
+        x, aux = carry
+
+        def run(p_blk, x):
+            return block_fn(_constrain(p_blk, layer_specs), x, cfg, positions)
+
+        if cfg.remat:
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, a, kvs = run(p_blk, x)
+        pad = cfg.max_seq_len - s
+        kvs = [
+            (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            for k, v in kvs
+        ]
+        ks = jnp.stack([k for k, _ in kvs])       # (n_sub, B, S, KV, dh)
+        vs = jnp.stack([v for _, v in kvs])
+        return (x, aux + a), (ks, vs)
+
+    (x, aux), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+    )
+    # (n_blocks, n_sub, ...) -> (L, ...) in true layer order
+    ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+    vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+    cache = {"k": ks, "v": vs, "length": jnp.array(s, jnp.int32)}
+    x = rmsnorm(x[:, -1:], params["ln_f"])
+    unembed = params["unembed"]
+    if use_specs and "unembed" in use_specs:
+        unembed = _constrain(unembed, use_specs["unembed"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, unembed, preferred_element_type=jnp.float32
+    )
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, cfg: TransformerConfig):
+    """One decode step. token (B,) -> (logits (B, V), new cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(cfg.dtype)
+    length = cache["length"]
+    positions = jnp.broadcast_to(length[None, None], (b, 1))
+
+    n_sub = _n_sub(cfg)
+
+    def sublayer(x, p_l, ck, cv, use_moe):
+        h = rmsnorm(x, p_l["ln1"])
+        q, k, v = _attn_proj(h, p_l, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, length, 0, 0))
+        att = decode_attention(q, ck, cv, length + 1)
+        att = jnp.einsum(
+            "bshe,hed->bsd", att, p_l["wo"], preferred_element_type=jnp.float32
+        ).astype(x.dtype)
+        x = x + att
+        h = rmsnorm(x, p_l["ln2"])
+        if use_moe:
+            d = h.shape[-1]
+            y, _ = moe_ffn(h.reshape(-1, d), p_l["moe"], cfg, cfg.moe)
+            y = y.reshape(b, 1, d)
+        else:
+            y = dense_ffn(h, p_l["mlp"], cfg)
+        return x + y, ck, cv
+
+    def body(x, blk):
+        p_blk, cks, cvs = blk        # cks/cvs: (n_sub, B, S, KV, dh)
+        new_ck, new_cv = [], []
+        for i in range(n_sub):
+            x, ck, cv = sublayer(
+                x, p_blk[f"sub{i}"], cks[i], cvs[i], _sub_uses_moe(cfg, i),
+            )
+            new_ck.append(ck)
+            new_cv.append(cv)
+        return x, (jnp.stack(new_ck), jnp.stack(new_cv))
+
+    n_blocks = cfg.n_layers // n_sub
+    ck_b = cache["k"].reshape(n_blocks, n_sub, *cache["k"].shape[1:])
+    cv_b = cache["v"].reshape(n_blocks, n_sub, *cache["v"].shape[1:])
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], ck_b, cv_b))
+    x = rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32
+    )
+    new_cache = {
+        "k": ks.reshape(cfg.n_layers, *ks.shape[2:]),
+        "v": vs.reshape(cfg.n_layers, *vs.shape[2:]),
+        "length": length + 1,
+    }
+    return logits[:, 0], new_cache
+
+
+# -------------------------------------------------------------------- params
+def _sublayer_shapes(cfg: TransformerConfig, with_moe: bool) -> dict:
+    d, h, kv, dh, f = (
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff,
+    )
+    shapes = {
+        "ln1": (d,),
+        "ln2": (d,),
+        "wq": (d, h, dh),
+        "wk": (d, kv, dh),
+        "wv": (d, kv, dh),
+        "wo": (h, dh, d),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (dh,)
+        shapes["k_norm"] = (dh,)
+    if with_moe:
+        m = cfg.moe
+        moe = {
+            "router": (d, m.n_experts),
+            "w1": (m.n_experts, d, m.d_expert),
+            "w2": (m.n_experts, m.d_expert, d),
+        }
+        if cfg.mlp_type == "swiglu":
+            moe["w3"] = (m.n_experts, d, m.d_expert)
+        if m.n_shared > 0:
+            fs = m.d_expert * m.n_shared
+            moe["shared"] = {"w1": (d, fs), "w2": (fs, d)}
+            if cfg.mlp_type == "swiglu":
+                moe["shared"]["w3"] = (d, fs)
+        shapes["moe"] = moe
+    else:
+        shapes["mlp"] = {"w1": (d, f), "w2": (f, d)}
+        if cfg.mlp_type == "swiglu":
+            shapes["mlp"]["w3"] = (d, f)
+    return shapes
+
+
+def _block_shapes(cfg: TransformerConfig) -> dict:
+    """One scanned block: ``moe_every`` sublayers, keys sub0..sub{n-1}."""
+    return {
+        f"sub{i}": _sublayer_shapes(cfg, _sub_uses_moe(cfg, i))
+        for i in range(_n_sub(cfg))
+    }
+
+
+def param_specs(cfg: TransformerConfig):
+    """ShapeDtypeStruct tree (dry-run input: no allocation)."""
+    assert cfg.n_layers % _n_sub(cfg) == 0, (cfg.n_layers, _n_sub(cfg))
+    n_blocks = cfg.n_layers // _n_sub(cfg)
+
+    def stack(shape):
+        return jax.ShapeDtypeStruct((n_blocks, *shape), cfg.dtype)
+
+    layers = jax.tree.map(
+        stack, _block_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), cfg.dtype),
+        "layers": layers,
+        "ln_f": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+        "unembed": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+_NORM_NAMES = ("ln1", "ln2", "ln_f", "q_norm", "k_norm")
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array):
+    """Real initialisation (smoke tests / the ~100M example runs)."""
+    specs = param_specs(cfg)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(key, len(paths))
+
+    def init_one(path, spec, k):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if any(n in name for n in _NORM_NAMES):
+            return jnp.ones(spec.shape, spec.dtype)
+        if name in ("embed", "unembed", "router"):
+            scale = cfg.d_model ** -0.5
+        else:
+            # fan-in of the matmul input dim (stacked layer dim excluded)
+            shape = spec.shape
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(
+            spec.dtype
+        )
+
+    out = [init_one(p, s, k) for (p, s), k in zip(paths, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    return sum(
+        int(np.prod(s.shape)) for s in jax.tree.leaves(param_specs(cfg))
+    )
+
+
+def active_params(cfg: TransformerConfig) -> int:
+    """Per-token touched parameters (MoE: top-k + shared experts only).
+
+    Used for MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens
+    (serve). Embedding-table rows excluded (gather, not matmul); the unembed
+    projection included (it is a matmul).
+    """
+    total = count_params(cfg)
+    embed = cfg.vocab * cfg.d_model          # embed only; unembed stays
+    if cfg.moe is None:
+        return total - embed
+    m = cfg.moe
+    n_moe_layers = sum(
+        1 for i in range(cfg.n_layers)
+        if (i % m.moe_every) == (m.moe_every - 1)
+    )
+    n_mats = 3 if cfg.mlp_type == "swiglu" else 2
+    per_expert = n_mats * cfg.d_model * m.d_expert
+    routed_total = n_moe_layers * m.n_experts * per_expert
+    routed_active = n_moe_layers * m.top_k * per_expert
+    return total - embed - routed_total + routed_active

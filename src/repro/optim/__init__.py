@@ -1,0 +1,23 @@
+"""Optimizers + distributed-training tricks, written from scratch (no optax).
+
+adamw       AdamW with decoupled weight decay
+sgd         SGD with Nesterov momentum
+adafactor   factored second moment (the 123B/400B dry-runs: O(n+m) state)
+grad_accum  microbatched gradient accumulation (lax.scan)
+compress    error-feedback top-k / int8 gradient compression (DP trick)
+
+Every optimizer follows the same protocol:
+  ``state = opt.init(params)``; ``params, state = opt.update(grads, state, params)``
+with state pytrees shaped like params (→ shard like params; ZeRO for free).
+"""
+
+from .adamw import adamw
+from .sgd import sgd
+from .adafactor import adafactor
+from .grad_accum import accumulate_gradients
+from .compress import ef_topk_compress, int8_compress, int8_decompress
+
+__all__ = [
+    "adamw", "sgd", "adafactor", "accumulate_gradients",
+    "ef_topk_compress", "int8_compress", "int8_decompress",
+]

@@ -1,0 +1,97 @@
+"""Adafactor [Shazeer & Stern, arXiv:1804.04235] — factored second moment.
+
+For a (n, m) matrix the second-moment estimate is stored as a rank-1 outer
+product of row/col means: O(n+m) state instead of O(n·m). This is what makes
+optimizer state for the 123B/400B assigned archs fit v5e HBM (DESIGN.md §6).
+Tensors with <2 dims (or tiny) fall back to full AdamW-style second moment.
+Implements RMS-scaled updates and update clipping (d=1.0), no momentum
+(beta1=0), per the paper's recommended LM settings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+__all__ = ["adafactor"]
+
+
+class FactoredSlot(NamedTuple):
+    vr: jnp.ndarray   # row second moment (..., n)
+    vc: jnp.ndarray   # col second moment (..., m)
+
+
+class FullSlot(NamedTuple):
+    v: jnp.ndarray
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    slots: Any
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,       # t^-decay second-moment schedule
+    eps1: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def slot(p):
+            if _is_factored(p.shape):
+                return FactoredSlot(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                )
+            return FullSlot(v=jnp.zeros_like(p, jnp.float32))
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            slots=jax.tree.map(slot, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            if isinstance(s, FactoredSlot):
+                vr = beta2 * s.vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s.vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+                u = g * jax.lax.rsqrt(
+                    vr[..., None] / denom[..., None]
+                ) * jax.lax.rsqrt(vc[..., None, :])
+                new_s = FactoredSlot(vr=vr, vc=vc)
+            else:
+                v = beta2 * s.v + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = FullSlot(v=v)
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * p32
+            return (p32 - lr * u).astype(p.dtype), new_s
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.slots)
+        outs = [one(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_slots = treedef.unflatten([o[1] for o in outs])
+        return new_params, AdafactorState(step=step, slots=new_slots)
+
+    return Optimizer(init=init, update=update)

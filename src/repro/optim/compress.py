@@ -1,0 +1,72 @@
+"""Gradient compression for the data-parallel all-reduce (DP trick).
+
+Two schemes, both standard large-scale techniques:
+
+* **error-feedback top-k** [Stich et al., arXiv:1809.07599-style]: transmit
+  only the top-k magnitude entries per tensor, accumulate the residual
+  locally and add it back next step — unbiased over time, ~k/n traffic;
+* **int8 quantisation with per-tensor scale**: 4× traffic reduction; the
+  scale rides along, decompress before the optimizer.
+
+Both operate on gradient pytrees and compose with the all-reduce: compress →
+psum/all-gather the compact form → decompress. On the production mesh the
+traffic term of the roofline is pure gradient bytes, so the compression
+ratio is exactly the collective-term divisor (§Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_topk_compress", "int8_compress", "int8_decompress"]
+
+
+def ef_topk_compress(grads: Any, residual: Any, k_frac: float = 0.01):
+    """Error-feedback top-k sparsification.
+
+    Returns ``(sparse_grads, new_residual)`` where ``sparse_grads`` is dense
+    with zeros off the top-k support (ready for a dense all-reduce in tests;
+    production would all-gather (idx, val) pairs — bytes accounting uses
+    ``2 * k`` words per tensor either way).
+    """
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        flat = g.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sparse = jnp.where(mask, g, 0.0)
+        return sparse, g - sparse
+
+    pairs = [one(g, r) for g, r in zip(jax.tree.leaves(grads),
+                                       jax.tree.leaves(residual))]
+    treedef = jax.tree.structure(grads)
+    sparse = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_res = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return sparse, new_res
+
+
+def int8_compress(grads: Any):
+    """Per-tensor symmetric int8 quantisation: ``(q_tree, scale_tree)``."""
+    def one(g):
+        g = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    leaves = jax.tree.leaves(grads)
+    treedef = jax.tree.structure(grads)
+    qs = [one(g) for g in leaves]
+    return (
+        jax.tree.unflatten(treedef, [q[0] for q in qs]),
+        jax.tree.unflatten(treedef, [q[1] for q in qs]),
+    )
+
+
+def int8_decompress(q_tree: Any, scale_tree: Any):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree
+    )

@@ -1,0 +1,45 @@
+"""SGD with (Nesterov) momentum."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+__all__ = ["sgd"]
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+
+
+def sgd(
+    lr: float = 0.1, momentum: float = 0.9, nesterov: bool = True,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return SGDState(
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params
+            )
+        )
+
+    def update(grads, state, params):
+        def one(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            step = g + momentum * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        m_leaves = treedef.flatten_up_to(state.momentum)
+        outs = [one(g, m, p) for g, m, p in zip(g_leaves, m_leaves, p_leaves)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        return new_params, SGDState(momentum=new_m)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,11 @@
+from .analysis import (
+    HW_V5E,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    analyze_compiled,
+)
+
+__all__ = [
+    "HW_V5E", "collective_bytes_from_hlo", "roofline_terms",
+    "analyze_compiled",
+]

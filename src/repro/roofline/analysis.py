@@ -1,0 +1,274 @@
+"""Roofline-term derivation from compiled dry-run artifacts (task §Roofline).
+
+Three terms per (arch x shape x mesh):
+
+    t_compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    t_memory     = HLO_bytes / (chips * HBM_bw)
+    t_collective = collective_bytes_per_chip / link_bw
+
+Sources: ``compiled.cost_analysis()`` gives flops + bytes accessed;
+collective bytes are NOT in cost_analysis — we parse the post-SPMD optimized
+HLO (``compiled.as_text()``) and apply ring-algorithm byte accounting per
+collective op (group size G parsed from ``replica_groups``):
+
+    all-gather          result_bytes * (G-1)/G
+    all-reduce          2 * result_bytes * (G-1)/G
+    reduce-scatter      result_bytes * (G-1)          (operand = G*result)
+    all-to-all          result_bytes * (G-1)/G
+    collective-permute  result_bytes
+
+Hardware constants are TPU v5e per chip: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the task brief).
+
+CPU-backend caveat (documented, applies uniformly to every cell): XLA:CPU
+reports cost_analysis flops AFTER SPMD partitioning for the whole program;
+bytes include argument traffic. Both are divided by chip count to get
+per-chip values; relative comparisons across cells/iterations (the thing
+the §Perf loop optimizes) are unaffected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = [
+    "HW_V5E", "collective_bytes_from_hlo", "roofline_terms",
+    "analyze_compiled",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [n_groups,group_size]<=[...]
+        return int(m.group(2))
+    return n_devices
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{")
+_CALL_EDGE_RE = re.compile(
+    r"(?:calls=|body=|true_computation=|false_computation=|"
+    r"branch_computations=\{)%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?"
+)
+_WHILE_RE = re.compile(r"\bwhile\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_INT_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO into computations: name -> list of instruction lines."""
+    comps, cur, entry = {}, None, None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_HEAD_RE.match(line)
+        if m and line.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count of a scan-lowered while: the integer constant its condition
+    compares against (scan induction runs 0..N step 1)."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_INT_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def _comp_multipliers(comps: dict, entry: str) -> dict:
+    """Execution multiplier per computation: products of enclosing while
+    trip counts (fusion/call/conditional edges propagate x1)."""
+    mult = {entry: 1.0} if entry else {}
+    stack = [entry] if entry else []
+    seen = set()
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        m = mult.get(name, 1.0)
+        for line in comps[name]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for target, factor in ((body, trips), (cond, trips)):
+                    mult[target] = max(mult.get(target, 0.0), m * factor)
+                    stack.append(target)
+                continue
+            for cm in _CALL_EDGE_RE.finditer(line):
+                for t in re.split(r",\s*%?", cm.group(1)):
+                    t = t.strip().lstrip("%")
+                    if t:
+                        mult[t] = max(mult.get(t, 0.0), m)
+                        stack.append(t)
+    return mult
+
+
+def collective_bytes_from_hlo(hlo_text: str, n_devices: int) -> dict:
+    """Per-collective-op byte accounting (ring algorithm, per chip).
+
+    While-loop aware: a collective inside a scan-lowered while body counts
+    once per trip (XLA emits the instruction once; we multiply by the parsed
+    trip count — cost_analysis does NOT, see module docstring).
+    """
+    comps, entry = _parse_computations(hlo_text)
+    mult = _comp_multipliers(comps, entry) if entry else {}
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"(?<!%)\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\("
+    )
+    for comp_name, lines in comps.items():
+        m = mult.get(comp_name, 1.0)
+        for s in lines:
+            if " = " not in s:
+                continue
+            _, rhs = s.split(" = ", 1)
+            opm = op_re.search(rhs)
+            if not opm:
+                continue
+            op = opm.group(1)
+            if opm.group(2) == "-done":
+                continue                  # counted at -start
+            g = _group_size(s, n_devices)
+            # result type(s) precede the op name in post-optimization HLO
+            rb = _shape_bytes(rhs[: opm.start()])
+            if g <= 1:
+                continue
+            if op == "all-gather":
+                moved = rb * (g - 1) / g
+            elif op == "all-reduce":
+                moved = 2 * rb * (g - 1) / g
+            elif op == "reduce-scatter":
+                moved = rb * (g - 1)
+            elif op == "all-to-all":
+                moved = rb * (g - 1) / g
+            else:                          # collective-permute
+                moved = rb
+            out[op] += moved * m
+            counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(
+    *, flops: float, bytes_accessed: float, collective_bytes: float,
+    n_devices: int, hw: Hardware = HW_V5E,
+) -> dict:
+    """The three terms in seconds + the dominant bottleneck.
+
+    All inputs are PER-CHIP quantities: XLA:CPU ``cost_analysis`` on an
+    SPMD-partitioned executable reports the per-device program (verified
+    against a known-FLOPs cell in EXPERIMENTS.md §Dry-run), and the HLO we
+    parse collectives from is likewise the per-device module.
+    """
+    del n_devices  # inputs already per-chip; kept for the report signature
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_coll = collective_bytes / hw.ici_bw
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    terms["bottleneck"] = dom.replace("t_", "").replace("_s", "")
+    terms["roofline_fraction"] = t_compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def analyze_compiled(compiled, *, n_devices: int, hw: Hardware = HW_V5E,
+                     model_flops: float | None = None) -> dict:
+    """Full per-cell report from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo, n_devices)
+    mem = compiled.memory_analysis()
+    mem_report = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_report[attr] = int(v)
+    report = {
+        "n_devices": n_devices,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": coll["total"],
+        "collective_detail": {k: coll[k] for k in _COLLECTIVES},
+        "collective_counts": coll["counts"],
+        "memory_analysis": mem_report,
+        **roofline_terms(
+            flops=flops, bytes_accessed=bytes_accessed,
+            collective_bytes=coll["total"], n_devices=n_devices, hw=hw,
+        ),
+    }
+    if model_flops is not None:
+        report["model_flops"] = model_flops
+        total_flops = flops * n_devices
+        report["useful_flops_ratio"] = (
+            model_flops / total_flops if total_flops > 0 else 0.0
+        )
+    return report

@@ -1,0 +1,14 @@
+from .sharding import (
+    axis_size,
+    lm_param_rules,
+    lm_train_shardings,
+    lm_decode_shardings,
+    spec_for,
+)
+from .fault import FaultCoordinator, StragglerPolicy
+
+__all__ = [
+    "axis_size", "lm_param_rules", "lm_train_shardings",
+    "lm_decode_shardings", "spec_for",
+    "FaultCoordinator", "StragglerPolicy",
+]

@@ -1,0 +1,309 @@
+"""Named-sharding rules per model family (DESIGN.md §6).
+
+The production mesh is ``(data=16, model=16)`` per pod, ``(pod=2, data=16,
+model=16)`` across pods. Strategy for LMs:
+
+* **FSDP** over ``(pod, data)``: the d_model dimension of every weight is
+  sharded over the data axes — XLA all-gathers just-in-time and
+  reduce-scatters gradients (ZeRO-3 equivalent under SPMD);
+* **TP** over ``model``: attention heads / FFN hidden / experts / vocab;
+* **batch** over ``(pod, data)``;
+* **KV cache** (decode): batch over ``data``, sequence over ``model`` (and
+  ``pod`` at 500k) — attention reduces over the sequence axis, so XLA lowers
+  it to flash-decoding-style partial softmax + tiny all-reduces.
+
+:func:`spec_for` drops any axis that does not divide a dim evenly (e.g.
+llama4's 40 heads on a 16-way model axis, kv=8 heads on 16) — correctness
+first, the §Perf loop re-shards what matters.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "axis_size", "spec_for", "lm_param_rules", "lm_use_rules",
+    "lm_train_shardings", "lm_decode_shardings", "named", "data_axes",
+]
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch/FSDP axes: ('pod', 'data') when a pod axis exists."""
+    return tuple(n for n in ("pod", "data") if n in mesh.shape)
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], axes_per_dim) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim.
+
+    ``axes_per_dim``: one entry per dim — None, an axis name, or a tuple of
+    axis names (applied greedily left-to-right while divisibility holds).
+    """
+    spec = []
+    for dim, want in zip(shape, axes_per_dim):
+        if want is None:
+            spec.append(None)
+            continue
+        axes = (want,) if isinstance(want, str) else tuple(want)
+        used = []
+        rem = dim
+        for a in axes:
+            s = mesh.shape[a]
+            if rem % s == 0:
+                used.append(a)
+                rem //= s
+        if not used:
+            spec.append(None)
+        elif len(used) == 1:
+            spec.append(used[0])
+        else:
+            spec.append(tuple(used))
+    return P(*spec)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ----------------------------------------------------------------- LM rules
+def _sublayer_rules(cfg, mesh: Mesh, *, with_moe: bool, stored: bool):
+    """Rules for one sublayer. ``stored=True`` -> FSDP storage layout
+    (data axes on a big dim, stacked block dim prepended); ``stored=False``
+    -> TP-only USE layout (no stacked dim, no data axes)."""
+    da = data_axes(mesh) if stored else ()
+    d, h, kv, dh, f = (
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff,
+    )
+    lead = (None,) if stored else ()
+
+    def s(shape, axes):
+        if stored:
+            shape = (0, *shape)          # stacked block dim (size unused)
+            axes = (None, *axes)
+        return spec_for(mesh, [1 if x == 0 else x for x in shape], axes)
+
+    da_or_none = da if stored else None
+    out = {
+        "ln1": s((d,), (None,)),
+        "ln2": s((d,), (None,)),
+        "wq": s((d, h, dh), (da_or_none, "model", None)),
+        "wk": s((d, kv, dh), (da_or_none, "model", None)),
+        "wv": s((d, kv, dh), (da_or_none, "model", None)),
+        "wo": s((h, dh, d), ("model", None, da_or_none)),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = s((dh,), (None,))
+        out["k_norm"] = s((dh,), (None,))
+    if with_moe:
+        m = cfg.moe
+        e, fe = m.n_experts, m.d_expert
+        moe = {
+            "router": s((d, e), (da_or_none, None)),
+            "w1": s((e, d, fe), ("model", da_or_none, None)),
+            "w2": s((e, fe, d), ("model", None, da_or_none)),
+        }
+        if cfg.mlp_type == "swiglu":
+            moe["w3"] = s((e, d, fe), ("model", da_or_none, None))
+        if m.n_shared > 0:
+            fs = fe * m.n_shared
+            sh = {
+                "w1": s((d, fs), (da_or_none, "model")),
+                "w2": s((fs, d), ("model", da_or_none)),
+            }
+            if cfg.mlp_type == "swiglu":
+                sh["w3"] = s((d, fs), (da_or_none, "model"))
+            moe["shared"] = sh
+        out["moe"] = moe
+    else:
+        mlp = {
+            "w1": s((d, f), (da_or_none, "model")),
+            "w2": s((f, d), ("model", da_or_none)),
+        }
+        if cfg.mlp_type == "swiglu":
+            mlp["w3"] = s((d, f), (da_or_none, "model"))
+        out["mlp"] = mlp
+    return out
+
+
+def _block_rules(cfg, mesh, *, stored: bool):
+    from repro.models.transformer import _n_sub, _sub_uses_moe
+
+    return {
+        f"sub{i}": _sublayer_rules(
+            cfg, mesh, with_moe=_sub_uses_moe(cfg, i), stored=stored
+        )
+        for i in range(_n_sub(cfg))
+    }
+
+
+def lm_param_rules(cfg, mesh: Mesh):
+    """STORAGE PartitionSpec tree matching ``transformer.param_specs(cfg)``:
+    FSDP dim -> data axes, TP dim -> model axis, stacked block dim unsharded.
+    """
+    d, v = cfg.d_model, cfg.vocab
+
+    def s(shape, axes):
+        return spec_for(mesh, shape, axes)
+
+    da = data_axes(mesh)
+    return {
+        # embed sharded on d_model over 'model' only: the token gather then
+        # needs no vocab-dim resharding (vocab-sharded embeddings trigger an
+        # involuntary full-remat in the SPMD partitioner — seen in dry-runs)
+        "embed": s((v, d), (None, "model")),
+        "layers": _block_rules(cfg, mesh, stored=True),
+        "ln_f": s((d,), (None,)),
+        "unembed": s((d, v), (da, "model")),
+    }
+
+
+def lm_use_rules(cfg, mesh: Mesh):
+    """USE shardings (TP-only, per block — no stacked dim, no data axes).
+
+    Passed to forward/prefill as ``use_specs``: params are STORED FSDP-
+    sharded (lm_param_rules) and gathered to these specs inside each scan
+    iteration (ZeRO-3); gradients reduce-scatter back automatically.
+    """
+    return {
+        "layers": _block_rules(cfg, mesh, stored=False),
+        "unembed": spec_for(
+            mesh, (cfg.d_model, cfg.vocab), (None, "model")
+        ),
+    }
+
+
+# -------------------------------------------------- ZeRO-3 (§Perf hillclimb)
+def lm_param_rules_zero3(cfg, mesh: Mesh):
+    """Full-shard storage: every big dim spread over ALL mesh axes.
+
+    §Perf iteration for the train cells: the TP baseline all-reduces full
+    activations per layer (measured 1110s collective on mistral train);
+    ZeRO-3 replaces that with per-layer weight all-gathers — traffic
+    3 passes x params-bytes per chip, independent of layer count.
+    MoE experts keep the expert dim on 'model' (expert parallelism) and
+    shard d_model over the data axes.
+    """
+    base = lm_param_rules(cfg, mesh)
+    flat = data_axes(mesh) + ("model",)
+
+    def reshard(spec_tree, shapes):
+        def one(spec, shape):
+            dims = shape.shape if hasattr(shape, "shape") else shape
+            if len(dims) < 2:
+                return P()
+            # keep expert dim on model (EP); shard the largest other dim
+            # over every axis that divides it
+            parts = [None] * len(dims)
+            if spec and len(spec) > 1 and spec[1] == "model" and len(dims) >= 4:
+                parts[1] = "model"              # stacked experts: (blk, E, ..)
+                big = max(range(2, len(dims)), key=lambda i: dims[i])
+                return spec_for(
+                    mesh, dims,
+                    tuple(parts[:big]) + (data_axes(mesh),) +
+                    tuple(parts[big + 1:]),
+                )
+            big = max(range(1, len(dims)), key=lambda i: dims[i])
+            axes = [None] * len(dims)
+            axes[big] = flat
+            return spec_for(mesh, dims, tuple(axes))
+
+        from repro.models.transformer import param_specs
+
+        return jax.tree.map(
+            one, spec_tree, shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    from repro.models.transformer import param_specs
+
+    specs = param_specs(cfg)
+    out = reshard(base, specs)
+    # embed stays gather-friendly (d over model)
+    out["embed"] = spec_for(
+        mesh, specs["embed"].shape, (None, "model")
+    )
+    return out
+
+
+def lm_use_rules_zero3(cfg, mesh: Mesh):
+    """USE shardings under ZeRO-3: everything gathered to REPLICATED except
+    MoE experts (kept expert-parallel on 'model') and the unembed (vocab on
+    'model' keeps logits sharded)."""
+    base = _block_rules(cfg, mesh, stored=False)
+
+    def one(path_spec):
+        return path_spec
+
+    out = {}
+    for sub, rules in base.items():
+        sub_out = {}
+        for name, spec in rules.items():
+            if name == "moe":
+                moe_out = {}
+                for mn, ms in spec.items():
+                    if mn == "shared":
+                        moe_out[mn] = jax.tree.map(
+                            lambda s: P(), ms,
+                            is_leaf=lambda x: isinstance(x, P),
+                        )
+                    elif mn == "router":
+                        moe_out[mn] = P()
+                    else:
+                        moe_out[mn] = ms    # keep E on 'model' (EP)
+                sub_out[name] = moe_out
+            else:
+                sub_out[name] = jax.tree.map(
+                    lambda s: P(), spec,
+                    is_leaf=lambda x: isinstance(x, P),
+                ) if isinstance(spec, dict) else P()
+        out[sub] = sub_out
+    return {
+        "layers": out,
+        "unembed": spec_for(
+            mesh, (cfg.d_model, cfg.vocab), (None, "model")
+        ),
+    }
+
+
+def lm_train_shardings(cfg, mesh: Mesh, *, global_batch: int, seq_len: int):
+    """(param_spec_tree, batch_spec) for the train step."""
+    da = data_axes(mesh)
+    params = lm_param_rules(cfg, mesh)
+    batch = {
+        "tokens": spec_for(mesh, (global_batch, seq_len), (da, None)),
+        "labels": spec_for(mesh, (global_batch, seq_len), (da, None)),
+    }
+    return params, batch
+
+
+def lm_decode_shardings(cfg, mesh: Mesh, *, batch: int):
+    """(param_spec_tree, cache_spec_tree, token_spec) for decode.
+
+    Cache sequence dim sharded over 'model' (+ 'pod','data' greedily for
+    batch=1 long-context); batch over data axes when it divides.
+    """
+    da = data_axes(mesh)
+    params = lm_param_rules(cfg, mesh)
+    L, S, KV, DH = cfg.n_layers, cfg.max_seq_len, cfg.n_kv_heads, cfg.d_head
+    if batch >= axis_size(mesh, da):
+        b_axes, s_axes = da, ("model",)
+    else:
+        # tiny batch (long-context): shard the sequence over everything
+        b_axes, s_axes = None, da + ("model",)
+    kv_spec = spec_for(
+        mesh, (L, batch, S, KV, DH), (None, b_axes, s_axes, None, None)
+    )
+    cache = {"k": kv_spec, "v": kv_spec, "length": P()}
+    token = spec_for(mesh, (batch,), (b_axes,))
+    return params, cache, token

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the REAL device
+count (1 CPU); only launch/dryrun.py forces 512 host devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FieldSpec, normalize_fields
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """Structured 3-field corpus, 1500 docs (session-cached)."""
+    from repro.data import CorpusConfig, make_corpus
+
+    docs, spec, topics = make_corpus(
+        CorpusConfig(n_docs=1500, field_dims=(64, 64, 128),
+                     vocab_sizes=(800, 1200, 3000), n_topics=16, seed=3)
+    )
+    return jnp.asarray(docs), spec, topics
+
+
+@pytest.fixture(scope="session")
+def random_corpus():
+    spec = FieldSpec(names=("a", "b", "c"), dims=(32, 32, 64))
+    x = jax.random.normal(jax.random.PRNGKey(0), (1200, spec.total_dim))
+    return normalize_fields(x, spec), spec

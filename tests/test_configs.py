@@ -1,0 +1,112 @@
+"""Registry + cell construction tests (no heavy compiles here)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ASSIGNED_ARCH_IDS, all_cells, get_arch
+
+LM_SHAPES = {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+GNN_SHAPES = {"full_graph_sm", "minibatch_lg", "ogb_products", "molecule"}
+RS_SHAPES = {"train_batch", "serve_p99", "serve_bulk", "retrieval_cand"}
+
+
+def test_all_archs_registered():
+    assert len(ASSIGNED_ARCH_IDS) == 10
+    assert "paper-retrieval" in ARCH_IDS
+
+
+def test_cell_matrix_complete():
+    cells = all_cells(ASSIGNED_ARCH_IDS)
+    assert len(cells) == 40, "40 assigned (arch x shape) cells required"
+    by_arch = {}
+    for c in cells:
+        by_arch.setdefault(c.arch, set()).add(c.shape)
+    for arch, shapes in by_arch.items():
+        if arch == "gcn-cora":
+            assert shapes == GNN_SHAPES
+        elif arch in ("bst", "dlrm-mlperf", "autoint", "mind"):
+            assert shapes == RS_SHAPES
+        else:
+            assert shapes == LM_SHAPES, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_configs_exist(arch):
+    mod = get_arch(arch)
+    cfg = mod.make_config()
+    smoke = mod.make_smoke_config()
+    assert cfg is not None and smoke is not None
+
+
+def test_assigned_lm_configs_match_spec():
+    """Exact assigned numbers (the brief's table)."""
+    c = get_arch("llama4-maverick-400b-a17b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 5120, 40, 8, 8192, 202_048)
+    assert c.moe.n_experts == 128 and c.moe.top_k == 1
+
+    c = get_arch("qwen2-moe-a2.7b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        24, 2048, 16, 1408, 151_936)
+    assert c.moe.top_k == 4 and c.moe.n_shared == 4
+
+    c = get_arch("mistral-large-123b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (88, 12_288, 96, 8, 28_672, 32_768)
+
+    c = get_arch("minitron-8b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 4096, 32, 8, 16_384, 256_000)
+
+    c = get_arch("qwen3-8b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (36, 4096, 32, 8, 12_288, 151_936)
+    assert c.qk_norm
+
+    g = get_arch("gcn-cora").make_config()
+    assert (g.n_layers, g.d_hidden, g.d_in) == (2, 16, 1433)
+
+    d = get_arch("dlrm-mlperf").make_config()
+    assert d.n_dense == 13 and d.n_sparse == 26 and d.embed_dim == 128
+    assert d.bot_mlp == (13, 512, 256, 128)
+
+    a = get_arch("autoint").make_config()
+    assert a.n_fields == 39 and a.embed_dim == 16 and a.n_attn_layers == 3
+
+    b = get_arch("bst").make_config()
+    assert b.embed_dim == 32 and b.seq_len == 20 and b.n_heads == 8
+
+    m = get_arch("mind").make_config()
+    assert m.embed_dim == 64 and m.n_interests == 4 and m.capsule_iters == 3
+
+
+def test_param_counts_in_band():
+    """Total params land near the archs' advertised sizes."""
+    from repro.models.transformer import active_params, count_params
+
+    expect = {
+        "llama4-maverick-400b-a17b": (3.5e11, 4.5e11),
+        "qwen2-moe-a2.7b": (1.2e10, 1.7e10),
+        "mistral-large-123b": (1.1e11, 1.35e11),
+        "minitron-8b": (7e9, 1.05e10),
+        "qwen3-8b": (7e9, 9.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_arch(arch).make_config()
+        n = count_params(cfg)
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+    a = active_params(get_arch("llama4-maverick-400b-a17b").make_config())
+    assert 1.2e10 <= a <= 2.2e10, f"active {a:.3e} should be ~17B"
+
+
+def test_cells_build_on_tiny_mesh():
+    """Every cell's build() returns consistent (fn, args, shardings) trees."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for cell in all_cells():
+        fn, args, in_sh, out_sh = cell.build(mesh)
+        assert callable(fn)
+        assert len(args) == len(in_sh), cell.name
+        # every arg leaf is a ShapeDtypeStruct
+        for leaf in jax.tree.leaves(args):
+            assert hasattr(leaf, "shape") and hasattr(leaf, "dtype")

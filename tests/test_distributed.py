@@ -1,0 +1,89 @@
+"""Distributed-search + sharding tests on 8 forced host devices.
+
+Runs in a SUBPROCESS so the 8-device XLA flag never leaks into other tests
+(jax locks the device count at first init).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import (ClusterPruneIndex, FieldSpec, brute_force_topk,
+                        competitive_recall, normalize_fields, weighted_query)
+from repro.core.distributed import (build_local_buckets, distributed_brute_topk,
+                                    distributed_index_search, shard_docs)
+from repro.launch.mesh import make_host_mesh
+
+spec = FieldSpec(names=("a", "b"), dims=(32, 32))
+n = 1024
+docs = normalize_fields(jax.random.normal(jax.random.PRNGKey(0), (n, 64)), spec)
+mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+axes = ("pod", "data", "model")
+docs_sh = shard_docs(docs, mesh, axes)
+w = jnp.tile(jnp.asarray([[0.7, 0.3]]), (4, 1))
+qw = weighted_query(docs[10:14], w, spec)
+
+# exact distributed top-k == single-device brute force
+s, i = distributed_brute_topk(mesh, docs_sh, qw, k=10, shard_axes=axes)
+gt_s, gt_i = brute_force_topk(docs, qw, 10)
+assert np.array_equal(np.asarray(i), np.asarray(gt_i)), "brute mismatch"
+
+# index-based distributed search == single-device index search
+idx = ClusterPruneIndex.build(docs, spec, 16, n_clusterings=3, method="fpf")
+assign = np.full((3, n), -1)
+for t in range(3):
+    bk = np.asarray(idx.buckets[t])
+    for c in range(bk.shape[0]):
+        for d in bk[c]:
+            if d < n:
+                assign[t, d] = c
+bl = build_local_buckets(assign, n, 8, 16)
+s2, i2 = distributed_index_search(mesh, docs_sh, idx.leaders,
+                                  jnp.asarray(bl), qw, probes_t=(2, 2, 2),
+                                  k=10, shard_axes=axes)
+s1, i1, _ = idx.search(qw, probes=6, k=10)
+# distributed and single-device agree up to float tie-breaks at the k-th
+# score: require >= 9/10 overlap per query and matched top scores
+for a, b, sa, sb in zip(np.asarray(i2), np.asarray(i1),
+                        np.asarray(s2), np.asarray(s1)):
+    overlap = len(set(a.tolist()) & set(b.tolist()))
+    assert overlap >= 9, f"index search overlap {overlap}: {a} vs {b}"
+    assert abs(float(sa[0]) - float(sb[0])) < 1e-3
+
+# sharding rules produce valid lowerings for a tiny LM on the host mesh
+from repro.configs import get_arch
+from repro.models import transformer as tf
+from repro.runtime.sharding import lm_param_rules, lm_use_rules
+from jax.sharding import NamedSharding
+cfg = get_arch("qwen3-8b").make_smoke_config()
+rules = lm_param_rules(cfg, mesh)
+use = lm_use_rules(cfg, mesh)
+specs = tf.param_specs(cfg)
+toks = jax.ShapeDtypeStruct((8, 32), jnp.int32)
+def step(p, t):
+    return tf.loss_fn(p, t, t, cfg, use)[0]
+shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), rules,
+                         is_leaf=lambda x: isinstance(x, P))
+with jax.set_mesh(mesh):
+    c = jax.jit(step, in_shardings=(shardings, NamedSharding(mesh, P(("pod", "data"), None)))).lower(specs, toks).compile()
+assert c.cost_analysis() is not None
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_search_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

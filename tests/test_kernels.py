@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    bucket_score, bucket_score_ref,
+    embed_bag, embed_bag_ref,
+    fpf_centers_fused, fpf_iter, fpf_iter_ref,
+    pack_bucket_major,
+    topk_score, topk_score_ref,
+)
+from repro.core import fpf_centers
+
+
+@pytest.mark.parametrize("nq,n,d,k", [
+    (1, 64, 32, 4), (5, 333, 96, 10), (16, 1024, 128, 32), (3, 50, 257, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_score_sweep(nq, n, d, k, dtype):
+    kq, kd = jax.random.split(jax.random.PRNGKey(n + d))
+    q = jax.random.normal(kq, (nq, d), jnp.float32).astype(dtype)
+    docs = jax.random.normal(kd, (n, d), jnp.float32).astype(dtype)
+    ex = jnp.arange(nq, dtype=jnp.int32) % n
+    s, i = topk_score(q, docs, k=k, exclude=ex, block_q=8, block_n=64)
+    rs, ri = topk_score_ref(q, docs, k, ex)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=tol,
+                               rtol=tol)
+    # ids may permute among ties under bf16; compare as sets per row
+    for a, b in zip(np.asarray(i), np.asarray(ri)):
+        assert set(a.tolist()) == set(b.tolist()) or dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("K,B,D,P,k", [
+    (8, 16, 32, 2, 4), (12, 24, 64, 3, 8), (20, 40, 128, 6, 16),
+])
+def test_bucket_score_sweep(K, B, D, P, k):
+    ks = jax.random.split(jax.random.PRNGKey(K * B), 5)
+    bd = jax.random.normal(ks[0], (K, B, D))
+    bi = jax.random.permutation(ks[1], K * B).reshape(K, B).astype(jnp.int32)
+    bi = jnp.where(jax.random.uniform(ks[2], (K, B)) < 0.25, -1, bi)
+    q = jax.random.normal(ks[3], (4, D))
+    probes = jax.random.randint(ks[4], (4, P), 0, K)
+    s, i = bucket_score(q, bd, bi, probes, k=k)
+    rs, ri = bucket_score_ref(q, bd, bi, probes, k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
+    assert np.array_equal(np.sort(np.asarray(i)), np.sort(np.asarray(ri)))
+
+
+def test_bucket_score_dedups_across_clusterings():
+    """The same doc id in two probed buckets must be returned once."""
+    D = 16
+    doc = jnp.ones((1, D)) / jnp.sqrt(D)
+    bd = jnp.tile(doc, (2, 4, 1))          # 2 buckets, same vectors
+    bi = jnp.asarray([[7, -1, -1, -1], [7, 3, -1, -1]], jnp.int32)
+    q = doc
+    s, i = bucket_score(q, bd, bi, jnp.asarray([[0, 1]]), k=4)
+    live = [x for x in np.asarray(i)[0].tolist() if x >= 0]
+    assert sorted(live) == [3, 7]
+
+
+@pytest.mark.parametrize("m,d", [(64, 16), (200, 32), (1000, 128)])
+def test_fpf_iter_sweep(m, d):
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, d))
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    ms = jnp.full((m,), -jnp.inf)
+    for c_idx in (0, m // 2):
+        nm, idx, val = fpf_iter(x, x[c_idx], ms, block_m=64)
+        rm, ridx, rval = fpf_iter_ref(x, x[c_idx], ms)
+        np.testing.assert_allclose(np.asarray(nm), np.asarray(rm), atol=1e-5)
+        assert int(idx) == int(ridx)
+        ms = nm
+
+
+def test_fpf_fused_full_loop_matches_core():
+    x = jax.random.normal(jax.random.PRNGKey(0), (150, 24))
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    key = jax.random.PRNGKey(4)
+    assert np.array_equal(
+        np.asarray(fpf_centers_fused(x, 6, key)),
+        np.asarray(fpf_centers(x, 6, key)),
+    )
+
+
+@pytest.mark.parametrize("V,E,B,L", [(50, 8, 4, 3), (200, 32, 16, 7),
+                                     (1000, 128, 8, 20)])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embed_bag_sweep(V, E, B, L, combiner):
+    ks = jax.random.split(jax.random.PRNGKey(V + L), 3)
+    tbl = jax.random.normal(ks[0], (V, E))
+    idx = jax.random.randint(ks[1], (B, L), -1, V)
+    out = embed_bag(tbl, idx, combiner=combiner)
+    ref = embed_bag_ref(tbl, idx, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_embed_bag_weighted_and_empty_bag():
+    tbl = jnp.eye(4, dtype=jnp.float32)
+    idx = jnp.asarray([[0, 1], [-1, -1]], jnp.int32)
+    w = jnp.asarray([[2.0, 3.0], [1.0, 1.0]])
+    out = embed_bag(tbl, idx, w)
+    np.testing.assert_allclose(np.asarray(out[0]), [2, 3, 0, 0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), [0, 0, 0, 0], atol=1e-6)
+
+
+def test_pack_bucket_major_roundtrip(random_corpus):
+    docs, spec = random_corpus
+    from repro.core import ClusterPruneIndex
+
+    idx = ClusterPruneIndex.build(docs, spec, 10, n_clusterings=1)
+    buckets = jnp.where(idx.buckets[0] < docs.shape[0], idx.buckets[0], -1)
+    data, ids = pack_bucket_major(docs, buckets)
+    live = np.asarray(ids) >= 0
+    gathered = np.asarray(data)[live]
+    expected = np.asarray(docs)[np.asarray(ids)[live]]
+    np.testing.assert_allclose(gathered, expected, atol=1e-6)

@@ -1,0 +1,96 @@
+"""Property tests of the paper's §4 weight-embedding theorem (hypothesis).
+
+The theorem: the top-k ranking under the aggregate weighted similarity
+``WS(w,q,p) = Σ w_i (q_i·p_i)`` equals the ranking under the plain cosine
+score of the normalised weighted query ``Q'_w·p`` — so one weight-free index
+serves every weight vector.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FieldSpec,
+    aggregate_similarity,
+    expand_weights,
+    normalize_fields,
+    nwd,
+    weighted_query,
+)
+
+DIMS = (8, 16, 12)
+SPEC = FieldSpec(names=("t", "a", "b"), dims=DIMS)
+
+
+def _unit_fields(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, SPEC.total_dim))
+    return normalize_fields(x, SPEC)
+
+
+@st.composite
+def weights_strategy(draw):
+    w = [draw(st.floats(0.01, 10.0)) for _ in range(SPEC.s)]
+    return np.asarray(w, np.float32)
+
+
+@settings(deadline=None, max_examples=30)
+@given(w=weights_strategy(), seed=st.integers(0, 2**16))
+def test_ranking_identical(w, seed):
+    """Exact statement: argsort under WS == argsort under Q'_w·p."""
+    docs = _unit_fields(seed % 97, 64)
+    q = _unit_fields(seed % 89 + 1, 1)[0]
+    w = jnp.asarray(w / w.sum())
+    ws = aggregate_similarity(q, w, docs, SPEC)
+    qn = weighted_query(q, w, SPEC)
+    reduced = docs @ qn
+    assert np.array_equal(
+        np.asarray(jnp.argsort(-ws)), np.asarray(jnp.argsort(-reduced))
+    )
+
+
+@settings(deadline=None, max_examples=30)
+@given(w=weights_strategy(), seed=st.integers(0, 2**16))
+def test_nwd_affine_in_ws(w, seed):
+    """NWD = 1 - WS/|Q_w|: a positive affine transform of WS."""
+    docs = _unit_fields(seed % 71, 32)
+    q = _unit_fields(seed % 61 + 2, 1)[0]
+    w = jnp.asarray(w)
+    ws = aggregate_similarity(q, w, docs, SPEC)
+    qw_raw = weighted_query(q, w, SPEC, normalize=False)
+    norm = jnp.linalg.norm(qw_raw)
+    d = nwd(q, w, docs, SPEC)
+    np.testing.assert_allclose(
+        np.asarray(d), np.asarray(1.0 - ws / norm), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(deadline=None, max_examples=20)
+@given(w=weights_strategy())
+def test_weight_scale_invariance(w):
+    """Scaling w by any c>0 leaves Q'_w unchanged (ranking invariant)."""
+    q = _unit_fields(5, 1)[0]
+    a = weighted_query(q, jnp.asarray(w), SPEC)
+    b = weighted_query(q, jnp.asarray(w * 7.3), SPEC)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_expand_weights_layout():
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    e = expand_weights(w, SPEC)
+    assert e.shape == (SPEC.total_dim,)
+    for i, sl in enumerate(SPEC.slices()):
+        assert bool(jnp.all(e[sl] == w[i]))
+
+
+def test_extended_triangle_inequality():
+    """sqrt(d) is a metric: d(x,z)^0.5 <= d(x,y)^0.5 + d(y,z)^0.5."""
+    pts = _unit_fields(11, 30)
+    # normalise the FULL vector (single-space cosine geometry)
+    pts = pts / jnp.linalg.norm(pts, axis=-1, keepdims=True)
+    d = 1.0 - pts @ pts.T
+    d = jnp.clip(d, 0.0, None) ** 0.5
+    lhs = d[:, None, :]                    # d(x,z)
+    rhs = d[:, :, None] + d[None, :, :]    # d(x,y)+d(y,z)
+    assert bool(jnp.all(lhs <= rhs + 1e-4))
