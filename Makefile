@@ -1,0 +1,15 @@
+.PHONY: test test-fast serve bench
+
+# Tier-1 verify (ROADMAP.md)
+test:
+	./scripts/ci.sh
+
+# Same, minus the slow multi-device subprocess tests
+test-fast:
+	./scripts/ci.sh -m "not slow"
+
+serve:
+	PYTHONPATH=src python -m repro.launch.serve --backend auto
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

@@ -4,6 +4,12 @@ The paper's claim: their scheme answers queries ~2x faster than CellDec at
 equal visited-cluster budgets (fewer, sparser distance computations); we
 additionally report the distance-computation count (hardware-independent
 cost, the paper's own accounting) next to wall time.
+
+Since the engine refactor, every probe budget is also timed across all
+registered search backends on the SAME built index (reference / fused /
+sharded), so the layout/mechanism cost is measured apples-to-apples. Note:
+off-TPU the fused backend runs the Pallas kernel in interpret mode — its
+wall time there is a correctness check, not a speed claim.
 """
 
 from __future__ import annotations
@@ -12,7 +18,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import CellDecIndex, ClusterPruneIndex, weighted_query
+from repro.core import (
+    CellDecIndex, ClusterPruneIndex, available_backends, get_engine,
+    weighted_query,
+)
 from repro.data import CorpusConfig, make_corpus
 
 from .common import bench_sizes, std_parser, timed
@@ -20,7 +29,8 @@ from .common import bench_sizes, std_parser, timed
 K_NN = 10
 
 
-def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
+def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
+        backends=None):
     sz = bench_sizes(scale)
     docs_np, spec, _ = make_corpus(CorpusConfig(
         n_docs=sz["n_docs"], field_dims=sz["field_dims"],
@@ -33,7 +43,7 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
     key = jax.random.PRNGKey(seed)
 
     ours = ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
-                                   method="fpf", key=key)
+                                   method="fpf", key=key, pack_major=True)
     celldec = CellDecIndex.build(docs, spec, kc, method="kmeans", iters=10,
                                  key=key)
 
@@ -47,10 +57,12 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
     print(f"\n# Fig 1 — query time vs visited clusters (n={sz['n_docs']}, "
           f"{nq} queries)")
     print("probes,algo,ms_per_query,distance_computations_per_query")
+    ref_engine = get_engine(ours, "reference")
     out = {}
     for probes in probe_grid:
         t_our, (s, i, ns) = timed(
-            lambda p=probes: ours.search(qw, probes=p, k=K_NN, exclude=qids)
+            lambda p=probes: ref_engine.search(qw, probes=p, k=K_NN,
+                                               exclude=qids)
         )
         dc_our = float(jnp.mean(ns))
         t_cd, (s2, i2, ns2) = timed(
@@ -61,6 +73,29 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
         print(f"{probes},our,{t_our / nq * 1e3:.3f},{dc_our:.0f}")
         print(f"{probes},celldec,{t_cd / nq * 1e3:.3f},{dc_cd:.0f}")
         out[probes] = (t_our / nq, dc_our, t_cd / nq, dc_cd)
+
+    # -- backend sweep: same index, same batch, every execution mechanism ----
+    if backends is None:
+        backends = available_backends()
+    mid = probe_grid[len(probe_grid) // 2]
+    print(f"\n# backends — same index, probes={mid} "
+          f"(platform={jax.default_backend()}; fused is interpret-mode "
+          f"off-TPU)")
+    print("backend,ms_per_query,distance_computations_per_query,ids_match_ref")
+    _, ids_ref, _ = ref_engine.search(qw, probes=mid, k=K_NN, exclude=qids)
+    for name in backends:
+        try:
+            eng = get_engine(ours, name)
+        except Exception as e:
+            print(f"# {name} skipped: {e}")
+            continue
+        t_b, (s, i, ns) = timed(
+            lambda e=eng: e.search(qw, probes=mid, k=K_NN, exclude=qids)
+        )
+        match = bool(np.array_equal(np.asarray(i), np.asarray(ids_ref)))
+        print(f"{name},{t_b / nq * 1e3:.3f},{float(jnp.mean(ns)):.0f},"
+              f"{match}")
+        out[f"backend:{name}"] = (t_b / nq, float(jnp.mean(ns)))
     return out
 
 

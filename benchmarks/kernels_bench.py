@@ -73,6 +73,51 @@ def run():
     vmem = (128 * 4 * 2) / 2**20
     print(f"embed_bag,(100000x128 B=256 L=16),{ok},{vmem:.3f},{t_ref*1e3:.1f}")
 
+    run_engines()
+
+
+def run_engines():
+    """Engine-layer bench: all search backends on ONE built index.
+
+    Unlike the per-kernel rows above this times the full serving hot path
+    (probe -> gather -> score -> merge) through the SearchEngine seam, so a
+    backend's layout cost (doc-major gather vs bucket-major block read vs
+    sharded local scoring) shows up end to end. Off-TPU the fused backend is
+    interpret-mode Pallas — agreement is the signal there, not wall time.
+    """
+    from repro.core import (
+        ClusterPruneIndex, FieldSpec, available_backends, get_engine,
+        normalize_fields,
+    )
+
+    key = jax.random.PRNGKey(1)
+    spec = FieldSpec(names=("a", "b", "c"), dims=(64, 64, 128))
+    docs = normalize_fields(jax.random.normal(key, (4096, 256)), spec)
+    idx = ClusterPruneIndex.build(docs, spec, 64, n_clusterings=3,
+                                  pack_major=True)
+    qw = docs[:16]
+    ex = jnp.arange(16, dtype=jnp.int32)
+
+    print(f"\n# Engine backends — one index (n=4096, K=64, T=3), 16 queries,"
+          f" probes=9 (platform={jax.default_backend()})")
+    print("backend,ms_per_query,matches_reference,n_scored_mean")
+    ref = get_engine(idx, "reference").search(qw, probes=9, k=10, exclude=ex)
+    for name in available_backends():
+        try:
+            eng = get_engine(idx, name)
+        except Exception as e:  # e.g. sharded divisibility on this host
+            print(f"# {name} skipped: {e}")
+            continue
+        t, (s, i, ns) = timed(
+            lambda e=eng: e.search(qw, probes=9, k=10, exclude=ex)
+        )
+        match = bool(
+            np.array_equal(np.asarray(i), np.asarray(ref[1]))
+            and np.allclose(np.asarray(s), np.asarray(ref[0]), atol=1e-4)
+            and np.array_equal(np.asarray(ns), np.asarray(ref[2]))
+        )
+        print(f"{name},{t / 16 * 1e3:.3f},{match},{float(jnp.mean(ns)):.0f}")
+
 
 if __name__ == "__main__":
     run()

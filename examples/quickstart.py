@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    ClusterPruneIndex, brute_force_topk, competitive_recall, weighted_query,
+    ClusterPruneIndex, brute_force_topk, competitive_recall, get_engine,
+    weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
 
@@ -30,8 +31,14 @@ weights = jnp.asarray(rng.dirichlet([1, 1, 1], 16), jnp.float32)
 
 # reduce (query, weights) -> one cosine query vector (paper §4 theorem)
 qw = weighted_query(queries, weights, spec)
-scores, ids, n_scored = index.search(qw, probes=9, k=10,
-                                     exclude=jnp.asarray(qids, jnp.int32))
+
+# search through the pluggable engine layer: "auto" picks the fastest
+# backend for this platform (fused Pallas on TPU, sharded on multi-device
+# hosts, pure-JAX reference otherwise) — same results either way
+engine = get_engine(index, "auto")
+print(f"search backend: {engine.name}")
+scores, ids, n_scored = engine.search(qw, probes=9, k=10,
+                                      exclude=jnp.asarray(qids, jnp.int32))
 
 # 4. verify against exhaustive search
 gt_s, gt_i = brute_force_topk(docs, qw, 10, exclude=jnp.asarray(qids))

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import (
     ClusterPruneIndex, FieldSpec, brute_force_topk, competitive_recall,
-    weighted_query,
+    get_engine, weighted_query,
 )
 from repro.models import recsys as rs
 
@@ -41,10 +41,13 @@ qw = weighted_query(interests.reshape(8, -1), w, spec)
 # brute force (exact)
 gt_s, gt_i = brute_force_topk(docs, qw, 10)
 
-# the paper's pruned index (weight-free build!)
+# the paper's pruned index (weight-free build!) served through the engine
+# seam — "auto" routes to the platform's fastest backend
 index = ClusterPruneIndex.build(docs, spec, 250, n_clusterings=3,
                                 method="fpf")
-scores, ids, n_scored = index.search(qw, probes=24, k=10)
+engine = get_engine(index, "auto")
+print(f"retrieval backend: {engine.name}")
+scores, ids, n_scored = engine.search(qw, probes=24, k=10)
 rec = float(jnp.mean(competitive_recall(ids, gt_i)))
 print(f"pruned retrieval recall@10 = {rec:.2f}/10, scanning "
       f"{float(jnp.mean(n_scored)) / N_ITEMS:.1%} of candidates "

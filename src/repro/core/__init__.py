@@ -9,7 +9,8 @@ Layers:
   index       ClusterPruneIndex — T independent clusterings + pruned search
   celldec     CellDec weight-region baseline [Singitham et al. VLDB'04]
   metrics     competitive recall, NAG, brute-force ground truth
-  distributed shard_map doc-sharded search + collective-light top-k merge
+  engine      pluggable SearchEngine backends: reference / fused / sharded
+  distributed shard_map substrate consumed by the "sharded" backend
 """
 
 from .fields import FieldSpec, concat_fields, normalize_fields, split_fields
@@ -23,7 +24,18 @@ from .weights import (
 from .fpf import ClusteringResult, assign_to_centers, fpf_centers, fpf_cluster
 from .kmeans import kmeans_cluster
 from .leaders import random_leader_cluster
-from .index import CLUSTERERS, ClusterPruneIndex, pack_buckets
+from .index import (
+    CLUSTERERS, ClusterPruneIndex, pack_buckets, pack_buckets_major,
+)
+from .engine import (
+    BACKENDS,
+    SearchEngine,
+    available_backends,
+    get_engine,
+    pick_backend,
+    register_backend,
+    split_probes,
+)
 from .celldec import CellDecIndex, region_of, region_weights
 from .metrics import (
     brute_force_bottomk,
@@ -39,7 +51,9 @@ __all__ = [
     "weighted_query",
     "ClusteringResult", "assign_to_centers", "fpf_centers", "fpf_cluster",
     "kmeans_cluster", "random_leader_cluster",
-    "CLUSTERERS", "ClusterPruneIndex", "pack_buckets",
+    "CLUSTERERS", "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
+    "BACKENDS", "SearchEngine", "available_backends", "get_engine",
+    "pick_backend", "register_backend", "split_probes",
     "CellDecIndex", "region_of", "region_weights",
     "brute_force_bottomk", "brute_force_topk", "competitive_recall",
     "normalized_aggregate_goodness", "quality_report",

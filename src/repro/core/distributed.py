@@ -1,4 +1,13 @@
-"""Distributed cluster-prune search — corpus sharded over the device mesh.
+"""``shard_map`` substrate of the **sharded** search backend.
+
+This module is no longer a parallel, self-standing search API: it supplies
+the collective primitives and the doc-sharded search kernel that
+:class:`repro.core.engine.ShardedEngine` wraps. Consumers should go through
+``get_engine(index, "sharded")`` (or ``backend="sharded"`` on
+``ClusterPruneIndex.search``), which layers the shared probe-splitting,
+exclude-masking, and ``n_scored`` accounting on top; the functions here stay
+public for the distributed tests and for the exact brute-force baseline used
+by the ``retrieval_cand`` serving cells.
 
 Layout (DESIGN.md §4/§6):
 
@@ -129,13 +138,16 @@ def distributed_index_search(
     docs_proj: jnp.ndarray | None = None,   # (n, pd) projected corpus
     qw_proj: jnp.ndarray | None = None,     # (nq, pd) projected queries
     shortlist: int = 64,
+    nav: jnp.ndarray | None = None,         # (nq, D) navigation queries
 ):
     """Distributed cluster-prune search over a doc-sharded corpus.
 
     ``buckets_local[s]`` packs shard ``s``'s members of every (clustering,
     cluster) pair with sentinel ``n_local``. Probing is replicated (same
     clusters everywhere — leaders are global); scoring is local; a single
-    all-gather of the per-shard top-k merges the answer.
+    all-gather of the per-shard top-k merges the answer. ``nav`` optionally
+    separates the LEADER-navigation query from the scoring query (CellDec
+    semantics, matching the other backends); defaults to ``qw``.
 
     **Two-stage scoring (beyond-paper, §Perf)**: when ``docs_proj``/
     ``qw_proj`` are given, candidates are first scored against the
@@ -147,15 +159,17 @@ def distributed_index_search(
     nq = qw.shape[0]
     if exclude is None:
         exclude = jnp.full((nq,), -1, jnp.int32)
+    if nav is None:
+        nav = qw
     n_shards = buckets_local.shape[0]
     n_local = docs.shape[0] // n_shards
     two_stage = docs_proj is not None
 
-    def kernel(docs_l, leaders_r, bkt_l, qw_r, ex_r, *proj):
+    def kernel(docs_l, leaders_r, bkt_l, qw_r, nav_r, ex_r, *proj):
         sidx = jax.lax.axis_index(axes)
         offset = (sidx * n_local).astype(jnp.int32)
         bkt = bkt_l[0]                                   # (T, K, B_l)
-        lsims = jnp.einsum("tkd,qd->qtk", leaders_r, qw_r)
+        lsims = jnp.einsum("tkd,qd->qtk", leaders_r, nav_r)
         cand_parts = []
         for t, p in enumerate(probes_t):
             if p == 0:
@@ -200,9 +214,9 @@ def distributed_index_search(
 
     in_specs = [
         P(axes, None), P(None, None, None),
-        P(axes, None, None, None), P(None, None), P(None),
+        P(axes, None, None, None), P(None, None), P(None, None), P(None),
     ]
-    args = [docs, leaders, buckets_local, qw, exclude]
+    args = [docs, leaders, buckets_local, qw, nav, exclude]
     if two_stage:
         in_specs += [P(axes, None), P(None, None)]
         args += [docs_proj, qw_proj]

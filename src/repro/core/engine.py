@@ -1,0 +1,373 @@
+"""Pluggable search-engine layer — ONE seam over the three search paths.
+
+The paper's hot path (probe T clusterings, score the probed buckets, merge a
+deduplicated top-k) historically existed three times: a pure-JAX gather path,
+a fused Pallas kernel that was never wired into serving, and a ``shard_map``
+distributed path with its own API. This module unifies them behind a single
+:class:`SearchEngine` protocol with three registered backends:
+
+``reference``
+    Pure-JAX doc-major gather (:func:`_search_block`) — the single-host
+    portable path and the semantics oracle for the other two.
+``fused``
+    The Pallas ``bucket_score`` kernel over the bucket-major ``(T*K, B, D)``
+    corpus materialised at index build time (interpret-mode off-TPU), so a
+    probe is a contiguous block DMA instead of a row gather.
+``sharded``
+    The ``shard_map`` doc-sharded path of :mod:`repro.core.distributed` —
+    local scoring, one collective-light top-k merge.
+
+All backends share *identical* probe semantics (:func:`split_probes` divides
+the budget evenly over the T clusterings), navigation-vs-scoring query split,
+duplicate suppression across overlapping clusterings, ``exclude`` masking,
+and the paper's Fig-1 ``n_scored`` distance-computation accounting — so
+every consumer (serving, benchmarks, examples) measures the same algorithm
+and differs only in the execution mechanism.
+
+Select a backend by name or let :func:`pick_backend` choose from the
+platform (TPU -> ``fused``, multi-device -> ``sharded``, else
+``reference``)::
+
+    engine = get_engine(index, "auto")
+    scores, ids, n_scored = engine.search(qw, probes=12, k=10)
+
+Adding a backend = subclass :class:`_EngineBase`, implement ``search``, and
+decorate with ``@register_backend("name")`` (see ROADMAP.md, "Architecture:
+search backends").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from .weights import weighted_query
+
+__all__ = [
+    "SearchEngine",
+    "BACKENDS",
+    "register_backend",
+    "available_backends",
+    "pick_backend",
+    "get_engine",
+    "split_probes",
+]
+
+
+def split_probes(probes: int, t: int) -> tuple[int, ...]:
+    """Distribute a total probe budget over T clusterings (paper: evenly)."""
+    base, rem = divmod(probes, t)
+    return tuple(base + (1 if i < rem else 0) for i in range(t))
+
+
+@runtime_checkable
+class SearchEngine(Protocol):
+    """What every backend provides: batched pruned top-k over one index."""
+
+    name: str
+
+    def search(
+        self,
+        qw: jnp.ndarray,
+        *,
+        probes: int,
+        k: int,
+        exclude: jnp.ndarray | None = None,
+        nav_query: jnp.ndarray | None = None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """-> (scores (nq, k), ids (nq, k), n_scored (nq,))."""
+        ...
+
+    def search_weighted(self, q, w, *, probes, k, exclude=None):
+        ...
+
+
+BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a :class:`SearchEngine` implementation."""
+
+    def deco(cls):
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(BACKENDS)
+
+
+def pick_backend(index=None) -> str:
+    """Platform auto-pick: TPU -> fused, multi-device -> sharded, else ref.
+
+    Given an ``index``, infeasible picks degrade gracefully (sharded needs
+    ``n_docs`` divisible by the device count) instead of raising later.
+    """
+    if jax.default_backend() == "tpu":
+        return "fused"
+    if jax.device_count() > 1:
+        if index is None or index.n_docs % jax.device_count() == 0:
+            return "sharded"
+        return "reference"
+    return "reference"
+
+
+def get_engine(index, backend: str = "auto", **opts) -> SearchEngine:
+    """Engine for ``index``. No-opts engines are cached on the index."""
+    name = pick_backend(index) if backend in (None, "auto") else backend
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(BACKENDS)}"
+        )
+    cls = BACKENDS[name]
+    if opts:
+        return cls(index, **opts)
+    cache = getattr(index, "_engines", None)
+    if cache is None:
+        cache = {}
+        index._engines = cache
+    if name not in cache:
+        cache[name] = cls(index)
+    return cache[name]
+
+
+# --------------------------------------------------------------------- shared
+class _EngineBase:
+    """Shared canonicalisation, probe selection and cost accounting."""
+
+    def __init__(self, index):
+        self.index = index
+
+    # Every backend reduces (query, weights) identically (paper §4 theorem).
+    # Query rank passes through so a 1-D query keeps the squeezed (k,) result
+    # shape, matching ClusterPruneIndex.search_weighted.
+    def search_weighted(self, q, w, *, probes, k, exclude=None):
+        qw = weighted_query(q, w, self.index.spec)
+        return self.search(qw, probes=probes, k=k, exclude=exclude)
+
+    def _canonical(self, qw, nav_query, exclude):
+        single = qw.ndim == 1
+        qw = jnp.atleast_2d(qw)
+        nav = qw if nav_query is None else jnp.atleast_2d(nav_query)
+        nq = qw.shape[0]
+        if exclude is None:
+            exclude = jnp.full((nq,), -1, jnp.int32)
+        exclude = jnp.broadcast_to(
+            jnp.atleast_1d(exclude), (nq,)
+        ).astype(jnp.int32)
+        return qw, nav, exclude, single
+
+    @staticmethod
+    def _finish(single, scores, ids, n_scored):
+        if single:
+            return scores[0], ids[0], n_scored[0]
+        return scores, ids, n_scored
+
+    def _probes_t(self, probes: int) -> tuple[int, ...]:
+        return split_probes(probes, self.index.leaders.shape[0])
+
+    def _flat_probes(self, nav, probes_t):
+        """Navigate: (nq, P) flattened (t*K + cluster) probe list."""
+        leaders = self.index.leaders                       # (T, K, D)
+        k_clusters = leaders.shape[1]
+        lsims = jnp.einsum("tkd,qd->qtk", leaders, nav)
+        parts = []
+        for t, p in enumerate(probes_t):
+            if p == 0:
+                continue
+            _, top_c = jax.lax.top_k(lsims[:, t, :], p)
+            parts.append(top_c + t * k_clusters)
+        return jnp.concatenate(parts, axis=-1).astype(jnp.int32)
+
+    def _n_scored(self, flat_probes):
+        """Fig-1 accounting: every member of a probed bucket is one distance
+        computation (dups across clusterings included — they really are
+        scored), plus the T*K leader comparisons."""
+        t, k_clusters = self.index.counts.shape
+        counts = self.index.counts.reshape(-1)
+        return (
+            jnp.sum(counts[flat_probes], axis=-1).astype(jnp.int32)
+            + t * k_clusters
+        )
+
+
+# ------------------------------------------------------------------ reference
+@register_backend("reference")
+class ReferenceEngine(_EngineBase):
+    """Pure-JAX doc-major gather path — portable oracle, single-host fast."""
+
+    def __init__(self, index, *, qchunk: int = 8):
+        super().__init__(index)
+        self.qchunk = qchunk
+
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
+        index = self.index
+        qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
+        nq = qw.shape[0]
+        probes_t = self._probes_t(probes)
+        fn = functools.partial(
+            _search_block, index.docs, index.leaders, index.buckets,
+            probes_t=probes_t, k=k,
+        )
+        qchunk = self.qchunk
+        pad = (-nq) % qchunk
+        qp = jnp.pad(qw, ((0, pad), (0, 0)))
+        np_ = jnp.pad(nav, ((0, pad), (0, 0)))
+        ep = jnp.pad(exclude, (0, pad), constant_values=-1)
+        scores, ids, scored = jax.lax.map(
+            lambda args: fn(*args),
+            (
+                qp.reshape(-1, qchunk, qp.shape[-1]),
+                np_.reshape(-1, qchunk, np_.shape[-1]),
+                ep.reshape(-1, qchunk),
+            ),
+        )
+        return self._finish(
+            single,
+            scores.reshape(-1, k)[:nq],
+            ids.reshape(-1, k)[:nq],
+            scored.reshape(-1)[:nq],
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("probes_t", "k"))
+def _search_block(
+    docs: jnp.ndarray,     # (n, D)
+    leaders: jnp.ndarray,  # (T, K, D)
+    buckets: jnp.ndarray,  # (T, K, B) sentinel n
+    qw: jnp.ndarray,       # (bq, D) weighted, normalised queries (scoring)
+    nav: jnp.ndarray,      # (bq, D) navigation queries (= qw unless CellDec)
+    exclude: jnp.ndarray,  # (bq,) doc id to mask (or -1)
+    *,
+    probes_t: tuple[int, ...],
+    k: int,
+):
+    """One query block: probe -> gather buckets -> score union -> dedup top-k."""
+    n = docs.shape[0]
+    lsims = jnp.einsum("tkd,qd->qtk", leaders, nav)  # (bq, T, K)
+
+    cand_parts = []
+    for t, p in enumerate(probes_t):
+        if p == 0:
+            continue
+        _, top_clusters = jax.lax.top_k(lsims[:, t, :], p)   # (bq, p)
+        cand_parts.append(buckets[t][top_clusters].reshape(qw.shape[0], -1))
+    cand = jnp.concatenate(cand_parts, axis=-1)              # (bq, m)
+
+    valid = cand < n
+    safe = jnp.where(valid, cand, 0)
+    cvecs = docs[safe]                                        # (bq, m, D)
+    scores = jnp.einsum("qmd,qd->qm", cvecs, qw)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    scores = jnp.where(cand == exclude[:, None], -jnp.inf, scores)
+
+    # Dedup across overlapping clusterings: identical doc => identical score,
+    # so sorting by id and masking equal neighbours keeps exactly one copy.
+    order = jnp.argsort(cand, axis=-1)
+    c_sorted = jnp.take_along_axis(cand, order, axis=-1)
+    s_sorted = jnp.take_along_axis(scores, order, axis=-1)
+    dup = c_sorted == jnp.pad(c_sorted[:, :-1], ((0, 0), (1, 0)), constant_values=-1)
+    s_sorted = jnp.where(dup, -jnp.inf, s_sorted)
+
+    top_s, pos = jax.lax.top_k(s_sorted, k)
+    top_ids = jnp.take_along_axis(c_sorted, pos, axis=-1)
+    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
+
+    # Cost accounting (paper Fig 1): every valid candidate is one distance
+    # computation (dups included — they really are scored), plus all leaders.
+    n_scored = jnp.sum(valid, axis=-1) + leaders.shape[0] * leaders.shape[1]
+    return top_s, top_ids, n_scored
+
+
+# ---------------------------------------------------------------------- fused
+@register_backend("fused")
+class FusedEngine(_EngineBase):
+    """Pallas ``bucket_score`` over the bucket-major corpus.
+
+    Probing selects rows of the ``(T*K, B, D)`` tensor materialised by
+    ``ClusterPruneIndex.build`` (or lazily on first use), so each probed
+    bucket is a contiguous block read scored on the MXU; the in-kernel
+    running top-k suppresses duplicates across overlapping clusterings.
+    Runs interpreted off-TPU (bit-compatible, slow — tests/CI only).
+    """
+
+    def __init__(self, index, *, interpret: bool | None = None):
+        super().__init__(index)
+        self.interpret = interpret
+
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
+        from ..kernels.bucket_score import bucket_score
+
+        qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
+        data, ids = self.index.ensure_bucket_major()     # (T*K, B, D), (T*K, B)
+        flat = self._flat_probes(nav, self._probes_t(probes))
+        s, i = bucket_score(
+            qw, data, ids, flat, k=k, exclude=exclude,
+            interpret=self.interpret,
+        )
+        i = jnp.where(jnp.isfinite(s), i, -1)
+        return self._finish(single, s, i, self._n_scored(flat))
+
+
+# -------------------------------------------------------------------- sharded
+@register_backend("sharded")
+class ShardedEngine(_EngineBase):
+    """``shard_map`` doc-sharded backend (see :mod:`repro.core.distributed`).
+
+    The corpus is row-sharded over the mesh; probing is replicated, scoring
+    is local, and the only collective is the 2k-word per-shard top-k merge.
+    Defaults to a 1-axis mesh over every visible device; requires
+    ``n_docs`` divisible by the shard count.
+    """
+
+    def __init__(self, index, *, mesh=None, shard_axes=None):
+        from .distributed import build_local_buckets, shard_docs
+
+        super().__init__(index)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            shard_axes = ("data",)
+        self.mesh = mesh
+        self.shard_axes = tuple(
+            shard_axes if shard_axes is not None else mesh.axis_names
+        )
+        n_shards = 1
+        for a in self.shard_axes:
+            n_shards *= mesh.shape[a]
+        if index.n_docs % n_shards:
+            raise ValueError(
+                f"sharded backend needs n_docs ({index.n_docs}) divisible by "
+                f"the shard count ({n_shards})"
+            )
+        self.n_shards = n_shards
+        t, k_clusters = index.counts.shape
+        self._docs_sh = shard_docs(index.docs, mesh, self.shard_axes)
+        self._buckets_local = jnp.asarray(
+            build_local_buckets(
+                index.assignments(), index.n_docs, n_shards, k_clusters
+            )
+        )
+
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
+        from .distributed import distributed_index_search
+
+        qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
+        probes_t = self._probes_t(probes)
+        s, i = distributed_index_search(
+            self.mesh, self._docs_sh, self.index.leaders,
+            self._buckets_local, qw,
+            probes_t=probes_t, k=k, shard_axes=self.shard_axes,
+            exclude=exclude, nav=nav,
+        )
+        i = jnp.where(jnp.isfinite(s), i, -1)
+        # Navigation runs twice (replicated in the kernel + here for cost
+        # accounting); leaders are T*K ~ sqrt(n) rows, so this is noise next
+        # to bucket scoring and keeps the shard_map signature probe-free.
+        flat = self._flat_probes(nav, probes_t)
+        return self._finish(single, s, i, self._n_scored(flat))

@@ -6,17 +6,22 @@ query (:func:`repro.core.weights.weighted_query`), probe the ``b/T`` clusters
 with the most similar representatives in *each* clustering, exhaustively score
 the union of their buckets, return the top-k.
 
-TPU layout: buckets are a single padded ``(T, K, B)`` id tensor (sentinel =
-``n``), so a probe is a static-shape gather and the scoring of all visited
-buckets is one MXU matmul per query block (see ``repro.kernels.bucket_score``
-for the fused kernel; this module is the pure-JAX reference path and the
-single-host fast path).
+This module owns the *data structure only*: the padded ``(T, K, B)`` bucket-id
+tensor (sentinel = ``n``), the per-clustering assignment vectors, and — new
+with the engine layer — the bucket-major ``(T, K, B, D)`` corpus tensor that
+the fused Pallas backend consumes, materialised **once at build time** (or
+lazily on first fused search when the build deferred it for memory).
+
+Search *execution* lives in :mod:`repro.core.engine`: three interchangeable
+backends (``reference`` pure-JAX gather, ``fused`` Pallas ``bucket_score``,
+``sharded`` ``shard_map``) share identical probe/dedup/exclude/cost
+semantics. :meth:`ClusterPruneIndex.search` is a thin delegation kept for
+backward compatibility — pass ``backend=`` to pick a path explicitly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
@@ -29,13 +34,20 @@ from .kmeans import kmeans_cluster
 from .leaders import random_leader_cluster
 from .weights import weighted_query
 
-__all__ = ["ClusterPruneIndex", "pack_buckets", "CLUSTERERS"]
+__all__ = [
+    "ClusterPruneIndex", "pack_buckets", "pack_buckets_major", "CLUSTERERS",
+]
 
 CLUSTERERS: dict[str, Callable[..., ClusteringResult]] = {
     "fpf": fpf_cluster,
     "kmeans": kmeans_cluster,
     "random": random_leader_cluster,
 }
+
+# Auto-materialise the bucket-major tensor at build (TPU only, where the
+# fused backend serves by default) when it costs less than this; otherwise
+# defer to the first fused search (ensure_bucket_major).
+_PACK_MAJOR_AUTO_BYTES = 256 * 2**20
 
 
 def pack_buckets(
@@ -60,10 +72,22 @@ def pack_buckets(
     return ids, counts
 
 
-def _split_probes(probes: int, t: int) -> tuple[int, ...]:
-    """Distribute a total probe budget over T clusterings (paper: evenly)."""
-    base, rem = divmod(probes, t)
-    return tuple(base + (1 if i < rem else 0) for i in range(t))
+def pack_buckets_major(
+    docs: jnp.ndarray, buckets: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """Bucket-major layout: (n, D) corpus + (T, K, B) ids -> (T, K, B, D).
+
+    Sentinel slots (id == ``n``) point at row 0; consumers mask them via the
+    id tensor, so the data tensor itself needs no sentinel handling. This is
+    the one-time layout conversion that lets the fused backend read a probed
+    bucket as a contiguous block instead of a row gather. Delegates to the
+    kernel-side :func:`repro.kernels.bucket_score.ops.pack_bucket_major`
+    after normalising this module's sentinel-``n`` padding to its ``-1``.
+    """
+    from ..kernels.bucket_score.ops import pack_bucket_major
+
+    data, _ = pack_bucket_major(docs, jnp.where(buckets < n, buckets, -1))
+    return data
 
 
 @dataclasses.dataclass
@@ -76,6 +100,8 @@ class ClusterPruneIndex:
     buckets: jnp.ndarray    # (T, K, B) int32, sentinel = n
     counts: jnp.ndarray     # (T, K) int32
     method: str = "fpf"
+    assign: np.ndarray | None = None        # (T, n) cluster of each doc
+    bucket_data: jnp.ndarray | None = None  # (T, K, B, D) bucket-major corpus
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -88,19 +114,28 @@ class ClusterPruneIndex:
         n_clusterings: int = 3,
         method: str = "fpf",
         key: jax.Array | None = None,
+        pack_major: bool | None = None,
         **clusterer_kwargs,
     ) -> "ClusterPruneIndex":
+        """Cluster T ways, pack buckets, and materialise the bucket-major
+        tensor for the fused backend where that backend will actually serve.
+
+        ``pack_major``: True forces the (T, K, B, D) tensor now, False defers
+        it to the first fused search, None (default) materialises it only on
+        TPU (the fused auto-pick platform) and within a modest memory budget
+        — either way the layout conversion happens exactly once per index.
+        """
         if key is None:
             key = jax.random.PRNGKey(0)
         n = docs.shape[0]
         clusterer = CLUSTERERS[method]
-        reps_l, ids_l, counts_l = [], [], []
+        reps_l, ids_l, counts_l, assign_l = [], [], [], []
         for t, sub in enumerate(jax.random.split(key, n_clusterings)):
             res = clusterer(docs, k_clusters, sub, **clusterer_kwargs)
             reps_l.append(res.reps)
-            ids, counts = pack_buckets(
-                np.asarray(res.assign), k_clusters, n
-            )
+            assign = np.asarray(res.assign)
+            assign_l.append(assign)
+            ids, counts = pack_buckets(assign, k_clusters, n)
             ids_l.append(ids)
             counts_l.append(counts)
         b = max(ids.shape[1] for ids in ids_l)
@@ -108,20 +143,66 @@ class ClusterPruneIndex:
             np.pad(ids, ((0, 0), (0, b - ids.shape[1])), constant_values=n)
             for ids in ids_l
         ]
+        buckets = jnp.asarray(np.stack(ids_l))
+        if pack_major is None:
+            pack_major = (
+                jax.default_backend() == "tpu"
+                and buckets.size * docs.shape[1] * docs.dtype.itemsize
+                <= _PACK_MAJOR_AUTO_BYTES
+            )
         return cls(
             spec=spec,
             docs=docs,
             leaders=jnp.stack(reps_l),
-            buckets=jnp.asarray(np.stack(ids_l)),
+            buckets=buckets,
             counts=jnp.asarray(np.stack(counts_l)),
             method=method,
+            assign=np.stack(assign_l).astype(np.int64),
+            bucket_data=(
+                pack_buckets_major(docs, buckets, n) if pack_major else None
+            ),
         )
 
-    # ----------------------------------------------------------------- search
+    # ------------------------------------------------------------- structure
     @property
     def n_docs(self) -> int:
         return self.docs.shape[0]
 
+    def assignments(self) -> np.ndarray:
+        """(T, n) cluster assignment per doc (derived from buckets if the
+        index predates the ``assign`` field)."""
+        if self.assign is not None:
+            return self.assign
+        t, k_clusters, _ = self.buckets.shape
+        bk = np.asarray(self.buckets)
+        out = np.full((t, self.n_docs), -1, np.int64)
+        for ti in range(t):
+            for c in range(k_clusters):
+                row = bk[ti, c]
+                out[ti, row[row < self.n_docs]] = c
+        return out
+
+    def ensure_bucket_major(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Bucket-major view for the fused backend: ``((T*K, B, D) data,
+        (T*K, B) ids with -1 padding)``. Materialises the data tensor if the
+        build deferred it; the flattened view is cached so the serving hot
+        path pays no per-query layout work."""
+        cached = getattr(self, "_bucket_major_flat", None)
+        if cached is not None:
+            return cached
+        if self.bucket_data is None:
+            self.bucket_data = pack_buckets_major(
+                self.docs, self.buckets, self.n_docs
+            )
+        t, k_clusters, b, d = self.bucket_data.shape
+        ids = jnp.where(self.buckets < self.n_docs, self.buckets, -1)
+        self._bucket_major_flat = (
+            self.bucket_data.reshape(t * k_clusters, b, d),
+            ids.reshape(t * k_clusters, b).astype(jnp.int32),
+        )
+        return self._bucket_major_flat
+
+    # ----------------------------------------------------------------- search
     def search_weighted(
         self,
         q: jnp.ndarray,
@@ -130,10 +211,12 @@ class ClusterPruneIndex:
         probes: int,
         k: int,
         exclude: jnp.ndarray | None = None,
+        backend: str = "reference",
     ):
         """Search with per-field query ``q (nq, D)`` and weights ``w (nq, s)``."""
         qw = weighted_query(q, w, self.spec)
-        return self.search(qw, probes=probes, k=k, exclude=exclude)
+        return self.search(qw, probes=probes, k=k, exclude=exclude,
+                           backend=backend)
 
     def search(
         self,
@@ -144,93 +227,26 @@ class ClusterPruneIndex:
         exclude: jnp.ndarray | None = None,
         qchunk: int = 8,
         nav_query: jnp.ndarray | None = None,
+        backend: str = "reference",
     ):
         """Cluster-pruned top-k for pre-weighted queries ``qw (nq, D)``.
 
-        ``nav_query``: optional separate query for LEADER navigation (the
-        CellDec baseline navigates with the region-squeezed composite while
-        scoring exactly — [18] §5.4); defaults to ``qw``.
+        Thin delegation to :mod:`repro.core.engine`; ``backend`` picks the
+        execution path (``"reference"``, ``"fused"``, ``"sharded"`` or
+        ``"auto"``). ``nav_query``: optional separate query for LEADER
+        navigation (the CellDec baseline navigates with the region-squeezed
+        composite while scoring exactly — [18] §5.4); defaults to ``qw``.
 
         Returns ``(scores (nq,k), ids (nq,k), n_scored (nq,))`` where
         ``n_scored`` counts true distance computations (leaders + candidates)
         for the paper's Fig-1 cost accounting.
         """
-        single = qw.ndim == 1
-        qw = jnp.atleast_2d(qw)
-        nq = qw.shape[0]
-        nav = qw if nav_query is None else jnp.atleast_2d(nav_query)
-        if exclude is None:
-            exclude = jnp.full((nq,), -1, jnp.int32)
-        exclude = jnp.broadcast_to(jnp.atleast_1d(exclude), (nq,))
-        probes_t = _split_probes(probes, self.leaders.shape[0])
-        fn = functools.partial(
-            _search_block, self.docs, self.leaders, self.buckets,
-            probes_t=probes_t, k=k,
+        from .engine import get_engine, pick_backend
+
+        name = pick_backend(self) if backend in (None, "auto") else backend
+        opts = {"qchunk": qchunk} if (
+            name == "reference" and qchunk != 8
+        ) else {}
+        return get_engine(self, name, **opts).search(
+            qw, probes=probes, k=k, exclude=exclude, nav_query=nav_query
         )
-        pad = (-nq) % qchunk
-        qp = jnp.pad(qw, ((0, pad), (0, 0)))
-        np_ = jnp.pad(nav, ((0, pad), (0, 0)))
-        ep = jnp.pad(exclude, (0, pad), constant_values=-1)
-        scores, ids, scored = jax.lax.map(
-            lambda args: fn(*args),
-            (
-                qp.reshape(-1, qchunk, qp.shape[-1]),
-                np_.reshape(-1, qchunk, np_.shape[-1]),
-                ep.reshape(-1, qchunk),
-            ),
-        )
-        scores = scores.reshape(-1, k)[:nq]
-        ids = ids.reshape(-1, k)[:nq]
-        scored = scored.reshape(-1)[:nq]
-        if single:
-            return scores[0], ids[0], scored[0]
-        return scores, ids, scored
-
-
-@functools.partial(jax.jit, static_argnames=("probes_t", "k"))
-def _search_block(
-    docs: jnp.ndarray,     # (n, D)
-    leaders: jnp.ndarray,  # (T, K, D)
-    buckets: jnp.ndarray,  # (T, K, B) sentinel n
-    qw: jnp.ndarray,       # (bq, D) weighted, normalised queries (scoring)
-    nav: jnp.ndarray,      # (bq, D) navigation queries (= qw unless CellDec)
-    exclude: jnp.ndarray,  # (bq,) doc id to mask (or -1)
-    *,
-    probes_t: tuple[int, ...],
-    k: int,
-):
-    """One query block: probe -> gather buckets -> score union -> dedup top-k."""
-    n = docs.shape[0]
-    lsims = jnp.einsum("tkd,qd->qtk", leaders, nav)  # (bq, T, K)
-
-    cand_parts = []
-    for t, p in enumerate(probes_t):
-        if p == 0:
-            continue
-        _, top_clusters = jax.lax.top_k(lsims[:, t, :], p)   # (bq, p)
-        cand_parts.append(buckets[t][top_clusters].reshape(qw.shape[0], -1))
-    cand = jnp.concatenate(cand_parts, axis=-1)              # (bq, m)
-
-    valid = cand < n
-    safe = jnp.where(valid, cand, 0)
-    cvecs = docs[safe]                                        # (bq, m, D)
-    scores = jnp.einsum("qmd,qd->qm", cvecs, qw)
-    scores = jnp.where(valid, scores, -jnp.inf)
-    scores = jnp.where(cand == exclude[:, None], -jnp.inf, scores)
-
-    # Dedup across overlapping clusterings: identical doc => identical score,
-    # so sorting by id and masking equal neighbours keeps exactly one copy.
-    order = jnp.argsort(cand, axis=-1)
-    c_sorted = jnp.take_along_axis(cand, order, axis=-1)
-    s_sorted = jnp.take_along_axis(scores, order, axis=-1)
-    dup = c_sorted == jnp.pad(c_sorted[:, :-1], ((0, 0), (1, 0)), constant_values=-1)
-    s_sorted = jnp.where(dup, -jnp.inf, s_sorted)
-
-    top_s, pos = jax.lax.top_k(s_sorted, k)
-    top_ids = jnp.take_along_axis(c_sorted, pos, axis=-1)
-    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
-
-    # Cost accounting (paper Fig 1): every valid candidate is one distance
-    # computation (dups included — they really are scored), plus all leaders.
-    n_scored = jnp.sum(valid, axis=-1) + leaders.shape[0] * leaders.shape[1]
-    return top_s, top_ids, n_scored

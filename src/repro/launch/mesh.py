@@ -12,26 +12,32 @@ traffic), 'model' stays intra-pod (ICI).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit-sharding API; older versions are Auto-only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_single_device_mesh", "make_host_mesh"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh over host devices (tests; requires enough host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_single_device_mesh():
     """1-device mesh with the production axis names (smoke tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return _make_mesh((1, 1), ("data", "model"))

@@ -1,14 +1,18 @@
 """Retrieval serving driver — the paper's system end to end.
 
 Builds the corpus, the FPF multi-clustering index, and serves batched
-dynamically-weighted queries (with exact brute-force verification):
+dynamically-weighted queries through the pluggable engine layer
+(:mod:`repro.core.engine`), with exact brute-force verification:
 
     PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 64 \
-        --probes 12 --k 10
+        --probes 12 --k 10 --backend fused
 
-Also exposes ``serve_requests`` for the examples and tests. LM serving
-(prefill/decode) lives in examples/serve_lm.py; this driver is the paper's
-own serving loop.
+``--backend`` selects the execution path (``auto`` picks fused on TPU,
+sharded on multi-device hosts, reference otherwise); ``--compare`` serves the
+same batch through every runnable backend on the same index and prints a
+per-backend latency/recall table. Also exposes ``serve_requests`` for the
+examples and tests. LM serving (prefill/decode) lives in examples/serve_lm.py;
+this driver is the paper's own serving loop.
 """
 
 from __future__ import annotations
@@ -22,10 +26,13 @@ import numpy as np
 
 from repro.core import (
     ClusterPruneIndex,
+    available_backends,
     brute_force_bottomk,
     brute_force_topk,
     competitive_recall,
+    get_engine,
     normalized_aggregate_goodness,
+    pick_backend,
     weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
@@ -34,23 +41,31 @@ __all__ = ["build_index", "serve_requests", "main"]
 
 
 def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
-                n_clusterings: int = 3, seed: int = 0):
+                n_clusterings: int = 3, seed: int = 0,
+                pack_major: bool | None = None):
     docs_np, spec, _ = make_corpus(CorpusConfig(n_docs=n_docs, seed=seed))
     docs = jnp.asarray(docs_np)
     if k_clusters is None:
         k_clusters = max(16, int(np.sqrt(n_docs)))
     index = ClusterPruneIndex.build(
         docs, spec, k_clusters, n_clusterings=n_clusterings, method="fpf",
-        key=jax.random.PRNGKey(seed),
+        key=jax.random.PRNGKey(seed), pack_major=pack_major,
     )
     return index, docs, spec
 
 
 def serve_requests(index, queries, weights, *, probes: int, k: int,
-                   exclude=None):
-    """One serving batch: (nq, D) queries + (nq, s) per-request weights."""
+                   exclude=None, engine=None, backend: str = "reference"):
+    """One serving batch: (nq, D) queries + (nq, s) per-request weights.
+
+    ``engine`` (a :class:`repro.core.SearchEngine`) or ``backend`` (a name)
+    picks the execution path; the default preserves the historical pure-JAX
+    reference behaviour.
+    """
+    if engine is None:
+        engine = get_engine(index, backend)
     qw = weighted_query(queries, weights, index.spec)
-    return index.search(qw, probes=probes, k=k, exclude=exclude), qw
+    return engine.search(qw, probes=probes, k=k, exclude=exclude), qw
 
 
 def main():
@@ -60,12 +75,25 @@ def main():
     ap.add_argument("--probes", type=int, default=12)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto",) + available_backends(),
+                    help="search engine backend (auto = platform pick)")
+    ap.add_argument("--compare", action="store_true",
+                    help="serve through every runnable backend and report "
+                         "per-backend latency on the same index")
     args = ap.parse_args()
 
+    # Materialise the bucket-major layout at build time whenever the fused
+    # backend may serve — the engine would otherwise do it on first search.
+    picked = pick_backend() if args.backend == "auto" else args.backend
+    need_major = args.compare or picked == "fused"
     t0 = time.time()
-    index, docs, spec = build_index(args.docs, seed=args.seed)
+    index, docs, spec = build_index(
+        args.docs, seed=args.seed, pack_major=True if need_major else None,
+    )
     print(f"[serve] index built in {time.time() - t0:.1f}s "
-          f"(K={index.leaders.shape[1]}, T={index.leaders.shape[0]})")
+          f"(K={index.leaders.shape[1]}, T={index.leaders.shape[0]}"
+          f"{', bucket-major packed' if index.bucket_data is not None else ''})")
 
     rng = np.random.default_rng(args.seed)
     qids = rng.choice(args.docs, args.queries, replace=False)
@@ -75,24 +103,50 @@ def main():
     weights = jnp.asarray(w)
     exclude = jnp.asarray(qids, jnp.int32)
 
-    t0 = time.time()
-    (scores, ids, n_scored), qw = serve_requests(
-        index, queries, weights, probes=args.probes, k=args.k,
-        exclude=exclude,
-    )
-    jax.block_until_ready(scores)
-    dt = time.time() - t0
+    # Exact ground truth: identical across backends, computed once.
+    qw = weighted_query(queries, weights, spec)
     gt_s, gt_i = brute_force_topk(docs, qw, args.k, exclude=exclude)
     far_s, _ = brute_force_bottomk(docs, qw, args.k, exclude=exclude)
-    cr = float(jnp.mean(competitive_recall(ids, gt_i)))
-    nag = float(jnp.mean(
-        normalized_aggregate_goodness(scores, gt_s, far_s)
-    ))
-    frac = float(jnp.mean(n_scored)) / args.docs
-    print(f"[serve] {args.queries} queries in {dt * 1e3:.1f} ms "
-          f"({dt / args.queries * 1e3:.2f} ms/query)")
-    print(f"[serve] recall@{args.k} = {cr:.2f}/{args.k}, NAG = {nag:.4f}, "
-          f"scored {frac:.1%} of corpus")
+
+    if args.compare:
+        backends = list(available_backends())
+    else:
+        # "auto" resolves against the built index (degrades gracefully when
+        # e.g. the sharded divisibility precondition fails); an explicitly
+        # infeasible backend is reported by the loop's skip path.
+        backends = [
+            pick_backend(index) if args.backend == "auto" else args.backend
+        ]
+    report = []
+    for name in backends:
+        try:
+            engine = get_engine(index, name)
+        except Exception as e:  # e.g. sharded divisibility on odd corpora
+            print(f"[serve] backend={name}: skipped ({e})")
+            continue
+        t0 = time.time()
+        scores, ids, n_scored = engine.search(
+            qw, probes=args.probes, k=args.k, exclude=exclude,
+        )
+        jax.block_until_ready(scores)
+        dt = time.time() - t0
+        cr = float(jnp.mean(competitive_recall(ids, gt_i)))
+        nag = float(jnp.mean(
+            normalized_aggregate_goodness(scores, gt_s, far_s)
+        ))
+        frac = float(jnp.mean(n_scored)) / args.docs
+        report.append((name, dt, cr, nag, frac))
+        print(f"[serve] backend={name}: {args.queries} queries in "
+              f"{dt * 1e3:.1f} ms ({dt / args.queries * 1e3:.2f} ms/query)")
+        print(f"[serve] backend={name}: recall@{args.k} = {cr:.2f}/{args.k}, "
+              f"NAG = {nag:.4f}, scored {frac:.1%} of corpus")
+
+    if len(report) > 1:
+        print("\n[serve] per-backend latency (same index, same batch)")
+        print("backend,ms_per_query,recall,nag,corpus_scanned")
+        for name, dt, cr, nag, frac in report:
+            print(f"{name},{dt / args.queries * 1e3:.3f},{cr:.2f},"
+                  f"{nag:.4f},{frac:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+"""Backend parity: reference / fused (interpret) / sharded must be ONE
+algorithm executed three ways — identical top-k ids, scores (to float
+tolerance), and n_scored cost accounting on the same built index."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterPruneIndex,
+    FieldSpec,
+    available_backends,
+    get_engine,
+    normalize_fields,
+    pick_backend,
+    split_probes,
+    weighted_query,
+)
+
+BACKENDS = ("reference", "fused", "sharded")
+
+
+@pytest.fixture(scope="module")
+def engine_corpus():
+    """Gaussian corpus (no duplicate vectors => no score ties => the top-k
+    is unique and parity can demand exact id equality)."""
+    spec = FieldSpec(names=("a", "b", "c"), dims=(32, 32, 64))
+    x = jax.random.normal(jax.random.PRNGKey(7), (640, spec.total_dim))
+    return normalize_fields(x, spec), spec
+
+
+@pytest.fixture(scope="module")
+def built_index(engine_corpus):
+    docs, spec = engine_corpus
+    return ClusterPruneIndex.build(
+        docs, spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), pack_major=True,
+    )
+
+
+def _assert_parity(ref, other, name):
+    s_ref, i_ref, n_ref = (np.asarray(a) for a in ref)
+    s, i, n = (np.asarray(a) for a in other)
+    assert np.array_equal(i, i_ref), f"{name}: top-k ids diverge"
+    np.testing.assert_allclose(s, s_ref, atol=1e-5, err_msg=name)
+    assert np.array_equal(n, n_ref), f"{name}: n_scored diverges"
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_backend_parity_plain(built_index, engine_corpus, backend):
+    docs, spec = engine_corpus
+    qw = docs[20:36]
+    ref = get_engine(built_index, "reference").search(qw, probes=6, k=10)
+    out = get_engine(built_index, backend).search(qw, probes=6, k=10)
+    _assert_parity(ref, out, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_backend_parity_exclude(built_index, engine_corpus, backend):
+    """Self-exclusion must mask the same doc in every backend."""
+    docs, spec = engine_corpus
+    qids = jnp.arange(8, dtype=jnp.int32)
+    qw = docs[:8]
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=10, exclude=qids
+    )
+    out = get_engine(built_index, backend).search(
+        qw, probes=6, k=10, exclude=qids
+    )
+    _assert_parity(ref, out, backend)
+    assert not np.any(np.asarray(out[1]) == np.arange(8)[:, None])
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_backend_parity_weighted(built_index, engine_corpus, backend):
+    """The dynamically-weighted path (the paper's setting)."""
+    docs, spec = engine_corpus
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.dirichlet([1.0] * spec.s, 12), jnp.float32)
+    q = docs[100:112]
+    ref = get_engine(built_index, "reference").search_weighted(
+        q, w, probes=9, k=7
+    )
+    out = get_engine(built_index, backend).search_weighted(
+        q, w, probes=9, k=7
+    )
+    _assert_parity(ref, out, backend)
+
+
+def test_index_search_delegates_to_backends(built_index, engine_corpus):
+    """ClusterPruneIndex.search(backend=...) is the same seam."""
+    docs, spec = engine_corpus
+    qw = docs[5:9]
+    ref = built_index.search(qw, probes=6, k=5)
+    for backend in BACKENDS[1:]:
+        out = built_index.search(qw, probes=6, k=5, backend=backend)
+        _assert_parity(ref, out, backend)
+
+
+def test_single_query_shape(built_index, engine_corpus):
+    docs, spec = engine_corpus
+    w1 = jnp.ones((spec.s,)) / spec.s
+    for backend in BACKENDS:
+        eng = get_engine(built_index, backend)
+        s, i, n = eng.search(docs[3], probes=6, k=5)
+        assert s.shape == (5,) and i.shape == (5,) and n.shape == ()
+        # 1-D weighted queries keep the squeezed shape too (matches the
+        # ClusterPruneIndex.search_weighted contract)
+        s, i, n = eng.search_weighted(docs[3], w1, probes=6, k=5)
+        assert s.shape == (5,) and i.shape == (5,) and n.shape == ()
+
+
+def test_nav_query_routes_probing(built_index, engine_corpus):
+    """All backends navigate with nav_query but score with qw (CellDec
+    semantics) — so they must still agree with each other."""
+    docs, _ = engine_corpus
+    qw = docs[40:48]
+    nav = docs[48:56]
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=10, nav_query=nav
+    )
+    for backend in BACKENDS[1:]:
+        out = get_engine(built_index, backend).search(
+            qw, probes=6, k=10, nav_query=nav
+        )
+        _assert_parity(ref, out, backend)
+
+
+def test_n_scored_counts_probed_buckets(built_index):
+    """n_scored == members of probed buckets (dups included) + T*K leaders."""
+    idx = built_index
+    qw = idx.docs[7:8]
+    t, k_clusters = idx.counts.shape
+    probes_t = split_probes(6, t)
+    lsims = jnp.einsum("tkd,qd->qtk", idx.leaders, qw)
+    expected = t * k_clusters
+    for ti, p in enumerate(probes_t):
+        _, top_c = jax.lax.top_k(lsims[:, ti, :], p)
+        expected += int(jnp.sum(idx.counts[ti][top_c[0]]))
+    for backend in BACKENDS:
+        _, _, n = get_engine(built_index, backend).search(qw, probes=6, k=5)
+        assert int(n[0]) == expected, backend
+
+
+def test_registry_and_autopick():
+    assert set(BACKENDS) <= set(available_backends())
+    assert pick_backend() in available_backends()
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_engine(object(), "no-such-backend")
+
+
+def test_lazy_bucket_major(engine_corpus):
+    """A build that defers packing still serves fused via lazy conversion."""
+    docs, spec = engine_corpus
+    idx = ClusterPruneIndex.build(
+        docs, spec, 16, n_clusterings=2, pack_major=False,
+    )
+    assert idx.bucket_data is None
+    qw = docs[10:14]
+    ref = get_engine(idx, "reference").search(qw, probes=4, k=5)
+    out = get_engine(idx, "fused").search(qw, probes=4, k=5)
+    assert idx.bucket_data is not None            # cached after first use
+    _assert_parity(ref, out, "fused-lazy")
