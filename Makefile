@@ -1,12 +1,12 @@
 .PHONY: test test-fast serve bench
 
-# Tier-1 verify (ROADMAP.md)
+# Tier-1 verify (ROADMAP.md) + serving-driver smoke
 test:
 	./scripts/ci.sh
 
-# Same, minus the slow multi-device subprocess tests
+# Tier-1 only, minus the slow multi-device subprocess tests
 test-fast:
-	./scripts/ci.sh -m "not slow"
+	./scripts/ci.sh --fast -m "not slow"
 
 serve:
 	PYTHONPATH=src python -m repro.launch.serve --backend auto

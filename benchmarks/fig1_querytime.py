@@ -5,11 +5,18 @@ equal visited-cluster budgets (fewer, sparser distance computations); we
 additionally report the distance-computation count (hardware-independent
 cost, the paper's own accounting) next to wall time.
 
+Our system is measured through the typed retrieval API (``SearchRequest`` ->
+``Retriever`` -> ``SearchResponse``), so the numbers include the full
+serving surface users actually hit — weight resolution, probe planning,
+decomposition — not just the kernel. The CellDec baseline predates the
+engine seam and keeps its own direct path.
+
 Since the engine refactor, every probe budget is also timed across all
 registered search backends on the SAME built index (reference / fused /
-sharded), so the layout/mechanism cost is measured apples-to-apples. Note:
-off-TPU the fused backend runs the Pallas kernel in interpret mode — its
-wall time there is a correctness check, not a speed claim.
+sharded) by tagging requests with ``backend=``, so the layout/mechanism
+cost is measured apples-to-apples. Note: off-TPU the fused backend runs the
+Pallas kernel in interpret mode — its wall time there is a correctness
+check, not a speed claim.
 """
 
 from __future__ import annotations
@@ -19,14 +26,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    CellDecIndex, ClusterPruneIndex, available_backends, get_engine,
-    weighted_query,
+    CellDecIndex, ClusterPruneIndex, Retriever, SearchRequest,
+    available_backends,
 )
 from repro.data import CorpusConfig, make_corpus
 
 from .common import bench_sizes, std_parser, timed
 
 K_NN = 10
+FIG1_WEIGHTS = (0.6, 0.2, 0.2)
+
+
+def _mlt_requests(qids, spec, *, probes, backend=None):
+    wd = dict(zip(spec.names, FIG1_WEIGHTS))
+    return [
+        SearchRequest(like=int(q), weights=wd, probes=probes, k=K_NN,
+                      backend=backend)
+        for q in np.asarray(qids)
+    ]
 
 
 def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
@@ -44,6 +61,7 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
 
     ours = ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
                                    method="fpf", key=key, pack_major=True)
+    retriever = Retriever(ours, backend="reference")
     celldec = CellDecIndex.build(docs, spec, kc, method="kmeans", iters=10,
                                  key=key)
 
@@ -51,20 +69,16 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
     nq = min(64, sz["n_queries"])
     qids = jnp.asarray(rng.choice(sz["n_docs"], nq, replace=False), jnp.int32)
     queries = docs[qids]
-    wv = jnp.tile(jnp.asarray([0.6, 0.2, 0.2], jnp.float32)[None], (nq, 1))
-    qw = weighted_query(queries, wv, spec)
+    wv = jnp.tile(jnp.asarray(FIG1_WEIGHTS, jnp.float32)[None], (nq, 1))
 
     print(f"\n# Fig 1 — query time vs visited clusters (n={sz['n_docs']}, "
           f"{nq} queries)")
     print("probes,algo,ms_per_query,distance_computations_per_query")
-    ref_engine = get_engine(ours, "reference")
     out = {}
     for probes in probe_grid:
-        t_our, (s, i, ns) = timed(
-            lambda p=probes: ref_engine.search(qw, probes=p, k=K_NN,
-                                               exclude=qids)
-        )
-        dc_our = float(jnp.mean(ns))
+        reqs = _mlt_requests(qids, spec, probes=probes)
+        t_our, responses = timed(lambda r=reqs: retriever.search(r))
+        dc_our = float(np.mean([resp.n_scored for resp in responses]))
         t_cd, (s2, i2, ns2) = timed(
             lambda p=probes: celldec.search_weighted(
                 queries, wv, probes=p, k=K_NN, exclude=qids)
@@ -74,7 +88,7 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
         print(f"{probes},celldec,{t_cd / nq * 1e3:.3f},{dc_cd:.0f}")
         out[probes] = (t_our / nq, dc_our, t_cd / nq, dc_cd)
 
-    # -- backend sweep: same index, same batch, every execution mechanism ----
+    # -- backend sweep: same index, same requests, every mechanism ----------
     if backends is None:
         backends = available_backends()
     mid = probe_grid[len(probe_grid) // 2]
@@ -82,20 +96,20 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
           f"(platform={jax.default_backend()}; fused is interpret-mode "
           f"off-TPU)")
     print("backend,ms_per_query,distance_computations_per_query,ids_match_ref")
-    _, ids_ref, _ = ref_engine.search(qw, probes=mid, k=K_NN, exclude=qids)
+    ref_resp = retriever.search(_mlt_requests(qids, spec, probes=mid))
+    ids_ref = np.stack([r.doc_ids for r in ref_resp])
     for name in backends:
+        reqs = _mlt_requests(qids, spec, probes=mid, backend=name)
         try:
-            eng = get_engine(ours, name)
+            t_b, responses = timed(lambda r=reqs: retriever.search(r))
         except Exception as e:
             print(f"# {name} skipped: {e}")
             continue
-        t_b, (s, i, ns) = timed(
-            lambda e=eng: e.search(qw, probes=mid, k=K_NN, exclude=qids)
-        )
-        match = bool(np.array_equal(np.asarray(i), np.asarray(ids_ref)))
-        print(f"{name},{t_b / nq * 1e3:.3f},{float(jnp.mean(ns)):.0f},"
-              f"{match}")
-        out[f"backend:{name}"] = (t_b / nq, float(jnp.mean(ns)))
+        ids_b = np.stack([r.doc_ids for r in responses])
+        dc = float(np.mean([r.n_scored for r in responses]))
+        match = bool(np.array_equal(ids_b, ids_ref))
+        print(f"{name},{t_b / nq * 1e3:.3f},{dc:.0f},{match}")
+        out[f"backend:{name}"] = (t_b / nq, dc)
     return out
 
 

@@ -4,6 +4,12 @@ Reproduces the paper's protocol: random query documents drawn from the data
 set (self-match excluded), k = 10, mean competitive recall in [0,10] and
 mean NAG in [0,1] per (algorithm x weight-set x visited-clusters) cell.
 
+Our system runs through the typed retrieval API: each cell is a batch of
+more-like-this ``SearchRequest`` objects (query document id + the weight
+set, keyed by field name) served by a ``Retriever``; MLT requests
+self-exclude, matching the paper's protocol by construction. The CellDec /
+PODS07 baselines predate the engine seam and keep their direct path.
+
 Expected (the paper's headline): Our (FPF x3) dominates CellDec and PODS07
 at equal probe budgets, with the gap widening for unequal weights.
 """
@@ -15,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    CellDecIndex, ClusterPruneIndex, brute_force_bottomk, brute_force_topk,
-    competitive_recall, normalized_aggregate_goodness, weighted_query,
+    CellDecIndex, ClusterPruneIndex, Retriever, SearchRequest,
+    brute_force_bottomk, brute_force_topk, competitive_recall,
+    normalized_aggregate_goodness, weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
 
@@ -37,9 +44,10 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
     kc = sz["k_clusters"]
     key = jax.random.PRNGKey(seed)
 
+    our_index = ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
+                                        method="fpf", key=key)
     algos = {
-        "our": ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
-                                       method="fpf", key=key),
+        "our": Retriever(our_index, backend="reference"),
         "celldec": CellDecIndex.build(docs, spec, kc, method="kmeans",
                                       iters=10, key=key),
         "pods07": CellDecIndex.build(docs, spec, kc, method="random",
@@ -64,6 +72,7 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
         qw = weighted_query(queries, wv, spec)
         gt_s, gt_i = brute_force_topk(docs, qw, K_NN, exclude=qids)
         far_s, _ = brute_force_bottomk(docs, qw, K_NN, exclude=qids)
+        wdict = dict(zip(spec.names, map(float, w)))
         for name, index in algos.items():
             recs, nags = [], []
             for probes in probe_grid:
@@ -71,8 +80,15 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
                     s, ids, _ = index.search_weighted(
                         queries, wv, probes=probes, k=K_NN, exclude=qids)
                 else:
-                    s, ids, _ = index.search(
-                        qw, probes=probes, k=K_NN, exclude=qids)
+                    responses = index.search([
+                        SearchRequest(like=int(q), weights=wdict,
+                                      probes=probes, k=K_NN)
+                        for q in np.asarray(qids)
+                    ])
+                    s = jnp.asarray(
+                        np.stack([r.scores for r in responses]))
+                    ids = jnp.asarray(
+                        np.stack([r.doc_ids for r in responses]))
                 recs.append(float(jnp.mean(competitive_recall(ids, gt_i))))
                 nags.append(float(jnp.mean(
                     normalized_aggregate_goodness(s, gt_s, far_s))))

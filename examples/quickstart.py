@@ -1,14 +1,14 @@
-"""Quickstart: build the paper's index, run dynamically-weighted queries.
+"""Quickstart: build the paper's index, run dynamically-weighted queries
+through the typed retrieval API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    ClusterPruneIndex, brute_force_topk, competitive_recall, get_engine,
+    Retriever, SearchRequest, brute_force_topk, competitive_recall,
     weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
@@ -18,30 +18,45 @@ docs_np, spec, _ = make_corpus(CorpusConfig(n_docs=8000))
 docs = jnp.asarray(docs_np)
 print(f"corpus: {docs.shape[0]} docs, fields {spec.names} dims {spec.dims}")
 
-# 2. ONE weight-free index (the paper's point: pre-processing never sees
-#    the user weights), FPF k-center clustering x3 independent clusterings
-index = ClusterPruneIndex.build(docs, spec, k_clusters=90, n_clusterings=3,
-                                method="fpf", key=jax.random.PRNGKey(0))
+# 2. ONE weight-free retriever (the paper's point: pre-processing never sees
+#    the user weights); FPF k-center clustering x3 independent clusterings,
+#    "auto" routes to the platform's fastest engine backend
+retriever = Retriever.build(docs, spec, k_clusters=90, n_clusterings=3,
+                            method="fpf")
+print(f"search backend: {retriever.backend}")
 
-# 3. user queries with PER-REQUEST field weights
+# 3. user requests with PER-REQUEST field weights, by field name — a query
+#    is "keywords or the identifier of a full document" (the paper's words):
+#    more-like-this requests resolve the vector from the corpus and exclude
+#    themselves; the weight embedding (paper §4) happens inside the facade.
 rng = np.random.default_rng(0)
 qids = rng.choice(8000, 16, replace=False)
-queries = docs[qids]
-weights = jnp.asarray(rng.dirichlet([1, 1, 1], 16), jnp.float32)
+wdicts = [
+    dict(zip(spec.names, map(float, w)))
+    for w in rng.dirichlet([1, 1, 1], 16)
+]
+requests = [
+    SearchRequest(like=int(qid), weights=wd, k=10, probes=9)
+    for qid, wd in zip(qids, wdicts)
+]
+responses = retriever.search(requests)
 
-# reduce (query, weights) -> one cosine query vector (paper §4 theorem)
-qw = weighted_query(queries, weights, spec)
+# every hit explains itself: per-field score decomposition sums to the score
+top = responses[0].hits[0]
+parts = ", ".join(f"{n}={v:.3f}" for n, v in top.field_scores.items())
+print(f"doc {int(qids[0])} with weights "
+      f"{ {n: round(v, 2) for n, v in wdicts[0].items()} } -> "
+      f"doc {top.doc_id} score {top.score:.3f} ({parts})")
 
-# search through the pluggable engine layer: "auto" picks the fastest
-# backend for this platform (fused Pallas on TPU, sharded on multi-device
-# hosts, pure-JAX reference otherwise) — same results either way
-engine = get_engine(index, "auto")
-print(f"search backend: {engine.name}")
-scores, ids, n_scored = engine.search(qw, probes=9, k=10,
-                                      exclude=jnp.asarray(qids, jnp.int32))
-
-# 4. verify against exhaustive search
+# 4. verify against exhaustive search (same §4 reduction, computed exactly)
+weights = jnp.asarray(np.array([[wd[n] for n in spec.names]
+                                for wd in wdicts], np.float32))
+qw = weighted_query(docs[qids], weights, spec)
 gt_s, gt_i = brute_force_topk(docs, qw, 10, exclude=jnp.asarray(qids))
+ids = jnp.asarray(np.stack([r.doc_ids for r in responses]))
 recall = float(jnp.mean(competitive_recall(ids, gt_i)))
+mean_scored = float(np.mean([r.n_scored for r in responses]))
 print(f"recall@10 = {recall:.2f}/10 scanning "
-      f"{float(jnp.mean(n_scored)) / 8000:.1%} of the corpus")
+      f"{mean_scored / 8000:.1%} of the corpus "
+      f"({responses[0].backend} backend, "
+      f"{responses[0].latency_s * 1e3:.1f} ms for the batch)")

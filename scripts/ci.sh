@@ -1,5 +1,30 @@
 #!/usr/bin/env bash
-# Tier-1 verify entrypoint — the exact command ROADMAP.md documents.
+# CI entrypoint.
+#
+#   scripts/ci.sh --fast    tier-1 unit tests only (the exact command
+#                           ROADMAP.md documents) — the pre-commit loop
+#   scripts/ci.sh           tier-1 tests PLUS a smoke run of the serving
+#                           driver, so API regressions in launch/serve.py
+#                           (the request->plan->engine->response path) fail
+#                           CI, not just unit tests
+#
+# Extra args are forwarded to pytest in both modes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+FAST=0
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) FAST=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
+done
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+
+if [[ "$FAST" == 0 ]]; then
+  echo "[ci] smoke: serving driver through the typed retrieval API"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --docs 2000 --queries 8
+fi

@@ -1,6 +1,7 @@
 """The paper's primary contribution: dynamic user-defined similarity search.
 
-Layers:
+Layers (top first — the typed API is the public surface):
+  api         SearchRequest/SearchResponse + Retriever facade over engines
   fields      multi-field vector-space corpus (concat layout)
   weights     query-side dynamic weight embedding (the paper's §4 theorem)
   fpf         furthest-point-first k-center clustering (the paper's clusterer)
@@ -19,6 +20,7 @@ from .weights import (
     cosine_distance,
     expand_weights,
     nwd,
+    validate_weights,
     weighted_query,
 )
 from .fpf import ClusteringResult, assign_to_centers, fpf_centers, fpf_cluster
@@ -36,6 +38,14 @@ from .engine import (
     register_backend,
     split_probes,
 )
+from .api import (
+    Hit,
+    Retriever,
+    SearchRequest,
+    SearchResponse,
+    decompose_scores,
+    plan_probes,
+)
 from .celldec import CellDecIndex, region_of, region_weights
 from .metrics import (
     brute_force_bottomk,
@@ -46,9 +56,11 @@ from .metrics import (
 )
 
 __all__ = [
+    "SearchRequest", "SearchResponse", "Hit", "Retriever",
+    "plan_probes", "decompose_scores",
     "FieldSpec", "concat_fields", "normalize_fields", "split_fields",
     "aggregate_similarity", "cosine_distance", "expand_weights", "nwd",
-    "weighted_query",
+    "validate_weights", "weighted_query",
     "ClusteringResult", "assign_to_centers", "fpf_centers", "fpf_cluster",
     "kmeans_cluster", "random_leader_cluster",
     "CLUSTERERS", "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",

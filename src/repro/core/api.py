@@ -1,0 +1,429 @@
+"""Typed retrieval API — the user-facing contract of the paper's system.
+
+The paper's query model is *dynamic, user-defined* similarity: a query is "a
+simple sequence of keywords or the identifier of a full document", and the
+per-field weights are chosen at query time, not index time. The engine layer
+(:mod:`repro.core.engine`) deliberately speaks pre-weighted arrays and raw
+``(scores, ids, n_scored)`` tuples — the right currency for kernels, the
+wrong one for users. This module is the seam between the two:
+
+:class:`SearchRequest`
+    A frozen description of ONE query: either a ``query`` vector (the
+    keyword-embedding form — concatenated ``(D,)`` or per-field blocks) or
+    ``like=doc_id`` (more-like-this, resolved against the index corpus),
+    weights given **by field name** and validated against the corpus
+    :class:`~repro.core.fields.FieldSpec`, plus ``k``, an explicit ``probes``
+    budget *or* a ``recall_target`` that :func:`plan_probes` maps to one,
+    an ``exclude`` id, and an optional ``backend`` override.
+
+:class:`SearchResponse` / :class:`Hit`
+    The answer: ranked :class:`Hit` objects carrying the doc id, the
+    aggregate score, and the **per-field score decomposition** (the split of
+    ``qw·p`` over ``spec.slices()`` — cheap, exact, and it explains *why* a
+    document matched under these weights), plus batch stats — ``n_scored``
+    distance-computation accounting, wall latency of the engine call, the
+    backend that served, and the realised probe budget.
+
+:class:`Retriever`
+    The facade that owns index + engine lifecycle. ``Retriever.build(...)``
+    constructs the :class:`~repro.core.index.ClusterPruneIndex`;
+    ``retriever.search(request | [requests])`` resolves doc-id vs. vector
+    queries, validates weights, plans probes, **batches heterogeneous
+    requests** that share an execution shape ``(backend, probes, k)`` into
+    one engine call each, and decomposes scores on the way out.
+
+The raw tuple surface survives only inside :mod:`repro.core.engine`; every
+consumer above it (serving driver, examples, benchmarks) speaks requests and
+responses. Future caching, batching and async serving extend this layer —
+an engine never needs to know.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fields import FieldSpec, normalize_fields
+from .index import ClusterPruneIndex
+from .weights import validate_weights, weighted_query
+
+__all__ = [
+    "SearchRequest",
+    "Hit",
+    "SearchResponse",
+    "Retriever",
+    "plan_probes",
+    "decompose_scores",
+]
+
+
+# ---------------------------------------------------------------- the planner
+# recall_target -> fraction of the T*K clusters to probe. Calibrated on the
+# synthetic Citeseer-like corpus at the Table-2 operating points (quick scale,
+# FPF x3): each rung is the smallest budget that met the target there. A
+# ladder (not a formula) keeps the mapping legible and monotone; targets
+# above the last rung mean "probe everything" = exact search.
+_RECALL_LADDER: tuple[tuple[float, float], ...] = (
+    (0.50, 0.04),
+    (0.80, 0.10),
+    (0.90, 0.20),
+    (0.95, 0.35),
+    (0.99, 0.60),
+)
+
+
+def plan_probes(
+    recall_target: float, n_clusterings: int, k_clusters: int
+) -> int:
+    """Map a recall target in (0, 1] to a total probe budget.
+
+    Monotone in the target, clamped to ``[n_clusterings, n_clusterings *
+    k_clusters]`` (at least one probe per clustering; at most all clusters,
+    which degenerates to exact search).
+    """
+    if not 0.0 < recall_target <= 1.0:
+        raise ValueError(
+            f"recall_target must be in (0, 1], got {recall_target}"
+        )
+    total = n_clusterings * k_clusters
+    frac = 1.0
+    for target, f in _RECALL_LADDER:
+        if recall_target <= target:
+            frac = f
+            break
+    probes = math.ceil(frac * total)
+    return max(n_clusterings, min(total, probes))
+
+
+# ---------------------------------------------------------------- the request
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchRequest:
+    """One dynamically-weighted similarity query (the paper's user contract).
+
+    Exactly one of ``query`` / ``like`` must be given:
+
+    ``query``
+        Keyword-embedding form: the per-field query vectors, either already
+        concatenated ``(D,)`` or a sequence of per-field blocks. Field blocks
+        are unit-normalised on resolution (corpus cosine geometry).
+    ``like``
+        More-like-this form: the identifier of a full corpus document; the
+        query vector is resolved from the index at search time, and the
+        document excludes itself from its own answer unless ``exclude`` is
+        set explicitly (``exclude=-1`` disables masking).
+
+    ``weights`` are given *by field name* (``{"title": 0.6, "abstract":
+    0.4}`` — unnamed fields get weight 0) or as a full per-field sequence;
+    ``None`` means equal weights. Validation against the corpus
+    :class:`FieldSpec` (unknown names, negative or all-zero weights) happens
+    at resolution, where the spec is known.
+
+    ``probes`` fixes the visited-cluster budget directly; ``recall_target``
+    lets :func:`plan_probes` choose it; setting both is an error, setting
+    neither uses the retriever's default. ``backend`` overrides the
+    retriever's engine choice for this request only.
+    """
+
+    query: jnp.ndarray | np.ndarray | Sequence | None = None
+    like: int | None = None
+    weights: Mapping[str, float] | Sequence[float] | None = None
+    k: int = 10
+    probes: int | None = None
+    recall_target: float | None = None
+    exclude: int | None = None
+    backend: str | None = None
+
+    def __post_init__(self):
+        if (self.query is None) == (self.like is None):
+            raise ValueError(
+                "exactly one of query= (keyword embedding) or like= (doc id) "
+                "must be given"
+            )
+        if self.like is not None and int(self.like) < 0:
+            raise ValueError(f"like= must be a doc id >= 0, got {self.like}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.probes is not None and self.recall_target is not None:
+            raise ValueError(
+                "give either probes= or recall_target=, not both"
+            )
+        if self.probes is not None and self.probes < 1:
+            raise ValueError(f"probes must be >= 1, got {self.probes}")
+        if self.recall_target is not None and not (
+            0.0 < self.recall_target <= 1.0
+        ):
+            raise ValueError(
+                f"recall_target must be in (0, 1], got {self.recall_target}"
+            )
+
+    # ------------------------------------------------------------ resolution
+    def resolve_weights(self, spec: FieldSpec) -> np.ndarray:
+        """Per-field weight vector ``(s,)`` in spec order, validated."""
+        if self.weights is None:
+            w = np.full((spec.s,), 1.0 / spec.s, np.float32)
+        elif isinstance(self.weights, Mapping):
+            unknown = set(self.weights) - set(spec.names)
+            if unknown:
+                raise ValueError(
+                    f"unknown field name(s) {sorted(unknown)}; "
+                    f"corpus fields are {list(spec.names)}"
+                )
+            w = np.asarray(
+                [float(self.weights.get(n, 0.0)) for n in spec.names],
+                np.float32,
+            )
+        else:
+            w = np.asarray(self.weights, np.float32)
+            if w.shape != (spec.s,):
+                raise ValueError(
+                    f"weights must have one entry per field "
+                    f"({spec.s}: {list(spec.names)}), got shape {w.shape}"
+                )
+        return validate_weights(w, spec)
+
+    def resolve_query(self, index: ClusterPruneIndex) -> jnp.ndarray:
+        """The unweighted ``(D,)`` query vector (per-field unit-normalised)."""
+        spec = index.spec
+        if self.like is not None:
+            if int(self.like) >= index.n_docs:
+                raise ValueError(
+                    f"like={self.like} out of range for a corpus of "
+                    f"{index.n_docs} documents"
+                )
+            return index.docs[int(self.like)]
+        q = self.query
+        if not isinstance(q, (jnp.ndarray, np.ndarray)):
+            q = jnp.concatenate([jnp.asarray(f).reshape(-1) for f in q])
+        q = jnp.asarray(q).reshape(-1)
+        if q.shape[0] != spec.total_dim:
+            raise ValueError(
+                f"query has dim {q.shape[0]}, corpus concat dim is "
+                f"{spec.total_dim} (fields {list(spec.names)} "
+                f"dims {list(spec.dims)})"
+            )
+        return normalize_fields(q, spec)
+
+    def resolve_exclude(self) -> int:
+        """Doc id to mask (-1 = none). MLT requests self-exclude by default."""
+        if self.exclude is not None:
+            return int(self.exclude)
+        return int(self.like) if self.like is not None else -1
+
+
+# --------------------------------------------------------------- the response
+@dataclasses.dataclass(frozen=True)
+class Hit:
+    """One retrieved document with its score and per-field decomposition.
+
+    ``field_scores[name]`` is the contribution of that field's block to the
+    aggregate: ``score == sum(field_scores.values())`` exactly (float tol),
+    because ``qw·p`` splits over ``spec.slices()`` by linearity.
+    """
+
+    doc_id: int
+    score: float
+    field_scores: dict[str, float]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchResponse:
+    """Ranked answer to one :class:`SearchRequest`, plus batch stats.
+
+    ``hits`` contains only valid results (short answers stay short);
+    ``doc_ids`` / ``scores`` are the raw fixed-``k`` engine arrays (-1 /
+    -inf padded) for metrics code that wants rectangular batches.
+    ``latency_s`` is the wall time of the engine call that served this
+    request's batch of ``batch_size`` requests; ``n_scored`` is this
+    request's own Fig-1 distance-computation count.
+    """
+
+    hits: tuple[Hit, ...]
+    doc_ids: np.ndarray      # (k,) int32, -1 padded
+    scores: np.ndarray       # (k,) float32, -inf padded
+    n_scored: int
+    latency_s: float
+    backend: str
+    probes: int
+    batch_size: int
+
+    def __len__(self) -> int:
+        return len(self.hits)
+
+    def __iter__(self):
+        return iter(self.hits)
+
+    @property
+    def ids(self) -> list[int]:
+        """Doc ids of the valid hits, best first."""
+        return [h.doc_id for h in self.hits]
+
+
+# ------------------------------------------------------------- decomposition
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _decompose(docs, qw, ids, *, spec: FieldSpec):
+    safe = jnp.where(ids >= 0, ids, 0)
+    hitvecs = docs[safe]                                 # (nq, k, D)
+    parts = [
+        jnp.einsum("qkd,qd->qk", hitvecs[..., sl], qw[..., sl])
+        for sl in spec.slices()
+    ]
+    out = jnp.stack(parts, axis=-1)                      # (nq, k, s)
+    return jnp.where((ids >= 0)[..., None], out, 0.0)
+
+
+def decompose_scores(
+    qw: jnp.ndarray, docs: jnp.ndarray, ids: jnp.ndarray, spec: FieldSpec
+) -> jnp.ndarray:
+    """Split ``qw·p`` over the field blocks: ``(nq, k, s)`` contributions.
+
+    Linearity of the dot product over ``spec.slices()`` makes this exact:
+    summing the last axis reproduces the aggregate engine score (invalid id
+    slots decompose to 0). One gather + s small einsums — cheap next to the
+    search itself.
+    """
+    return _decompose(docs, jnp.atleast_2d(qw), jnp.atleast_2d(ids), spec=spec)
+
+
+# ------------------------------------------------------------------ retriever
+class Retriever:
+    """Facade over index + engines: typed requests in, typed responses out.
+
+    Owns one :class:`ClusterPruneIndex` and the (cached) engines over it.
+    ``search`` accepts a single request or a heterogeneous batch; requests
+    sharing an execution shape ``(backend, probes, k)`` are served by ONE
+    engine call (the engine's batch dimension), others are grouped into as
+    few calls as their shapes allow, and responses come back in request
+    order.
+    """
+
+    def __init__(self, index: ClusterPruneIndex, *, backend: str = "auto",
+                 default_probes: int = 12):
+        from .engine import pick_backend
+
+        self.index = index
+        self.backend = (
+            pick_backend(index) if backend in (None, "auto") else backend
+        )
+        self.default_probes = default_probes
+
+    @classmethod
+    def build(
+        cls,
+        docs,
+        spec: FieldSpec,
+        k_clusters: int,
+        *,
+        backend: str = "auto",
+        default_probes: int = 12,
+        **build_kwargs,
+    ) -> "Retriever":
+        """Build the weight-free index and wrap it (one-stop constructor)."""
+        index = ClusterPruneIndex.build(docs, spec, k_clusters, **build_kwargs)
+        return cls(index, backend=backend, default_probes=default_probes)
+
+    @property
+    def spec(self) -> FieldSpec:
+        return self.index.spec
+
+    # ------------------------------------------------------------- planning
+    def _plan(self, req: SearchRequest) -> tuple[str, int]:
+        """(backend name, probe budget) for one request."""
+        backend = req.backend or self.backend
+        if req.probes is not None:
+            probes = req.probes
+        elif req.recall_target is not None:
+            t, k_clusters = self.index.counts.shape
+            probes = plan_probes(req.recall_target, t, k_clusters)
+        else:
+            probes = self.default_probes
+        return backend, probes
+
+    # -------------------------------------------------------------- serving
+    def search(
+        self, request: SearchRequest | Iterable[SearchRequest]
+    ) -> SearchResponse | list[SearchResponse]:
+        """Serve one request or a heterogeneous batch (responses in order)."""
+        if isinstance(request, SearchRequest):
+            return self._search_batch([request])[0]
+        return self._search_batch(list(request))
+
+    def _search_batch(self, reqs: list[SearchRequest]) -> list[SearchResponse]:
+        from .engine import get_engine
+
+        if not reqs:
+            return []
+        index, spec = self.index, self.spec
+
+        # Resolve every request up front (vectorised where it matters):
+        # queries come from the corpus (like=) or the request (query=) —
+        # an all-MLT batch (the serving hot path) is ONE corpus gather —
+        # and weights fold in via the §4 reduction in ONE call.
+        if all(r.like is not None for r in reqs):
+            bad = [r.like for r in reqs if int(r.like) >= index.n_docs]
+            if bad:
+                raise ValueError(
+                    f"like={bad[0]} out of range for a corpus of "
+                    f"{index.n_docs} documents"
+                )
+            q_all = index.docs[jnp.asarray([int(r.like) for r in reqs])]
+        else:
+            q_all = jnp.stack([r.resolve_query(index) for r in reqs])
+        w_rows = np.stack([r.resolve_weights(spec) for r in reqs])
+        qw_all = weighted_query(q_all, jnp.asarray(w_rows), spec)  # (N, D)
+        excl_all = np.asarray(
+            [r.resolve_exclude() for r in reqs], np.int32
+        )
+        plans = [self._plan(r) for r in reqs]
+
+        # Group by execution shape; each group is one engine call.
+        groups: dict[tuple[str, int, int], list[int]] = {}
+        for i, (r, (backend, probes)) in enumerate(zip(reqs, plans)):
+            groups.setdefault((backend, probes, r.k), []).append(i)
+
+        out: list[SearchResponse | None] = [None] * len(reqs)
+        for (backend, probes, k), rows in groups.items():
+            engine = get_engine(index, backend)
+            qw = qw_all[jnp.asarray(rows)]
+            excl = jnp.asarray(excl_all[rows])
+            t0 = time.perf_counter()
+            scores, ids, n_scored = engine.search(
+                qw, probes=probes, k=k, exclude=excl
+            )
+            jax.block_until_ready(scores)
+            dt = time.perf_counter() - t0
+            fields = decompose_scores(qw, index.docs, ids, spec)
+            scores_np = np.asarray(scores, np.float32)
+            ids_np = np.asarray(ids, np.int32)
+            n_np = np.asarray(n_scored, np.int32)
+            fields_np = np.asarray(fields, np.float32)
+            for j, i in enumerate(rows):
+                hits = tuple(
+                    Hit(
+                        doc_id=int(ids_np[j, c]),
+                        score=float(scores_np[j, c]),
+                        field_scores={
+                            name: float(fields_np[j, c, f])
+                            for f, name in enumerate(spec.names)
+                        },
+                    )
+                    for c in range(k)
+                    if ids_np[j, c] >= 0
+                )
+                out[i] = SearchResponse(
+                    hits=hits,
+                    doc_ids=ids_np[j],
+                    scores=scores_np[j],
+                    n_scored=int(n_np[j]),
+                    latency_s=dt,
+                    backend=engine.name,
+                    probes=probes,
+                    batch_size=len(rows),
+                )
+        return out  # type: ignore[return-value]

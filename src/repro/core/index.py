@@ -225,17 +225,26 @@ class ClusterPruneIndex:
         probes: int,
         k: int,
         exclude: jnp.ndarray | None = None,
-        qchunk: int = 8,
+        qchunk: int | None = None,
         nav_query: jnp.ndarray | None = None,
         backend: str = "reference",
     ):
         """Cluster-pruned top-k for pre-weighted queries ``qw (nq, D)``.
 
-        Thin delegation to :mod:`repro.core.engine`; ``backend`` picks the
-        execution path (``"reference"``, ``"fused"``, ``"sharded"`` or
-        ``"auto"``). ``nav_query``: optional separate query for LEADER
-        navigation (the CellDec baseline navigates with the region-squeezed
-        composite while scoring exactly — [18] §5.4); defaults to ``qw``.
+        **Deprecated** thin shim over :mod:`repro.core.engine`, kept for
+        existing callers — new code should speak
+        :class:`repro.core.api.SearchRequest` through a
+        :class:`repro.core.api.Retriever` (typed responses, weight
+        validation, per-field score decomposition) or use ``get_engine``
+        directly for raw tuples.
+
+        ``backend`` picks the execution path (``"reference"``, ``"fused"``,
+        ``"sharded"`` or ``"auto"``). ``nav_query``: optional separate query
+        for LEADER navigation (the CellDec baseline navigates with the
+        region-squeezed composite while scoring exactly — [18] §5.4);
+        defaults to ``qw``. ``qchunk`` (None = backend default) is honoured
+        only by the ``reference`` backend; setting it with any other
+        backend raises instead of being silently dropped.
 
         Returns ``(scores (nq,k), ids (nq,k), n_scored (nq,))`` where
         ``n_scored`` counts true distance computations (leaders + candidates)
@@ -244,9 +253,13 @@ class ClusterPruneIndex:
         from .engine import get_engine, pick_backend
 
         name = pick_backend(self) if backend in (None, "auto") else backend
-        opts = {"qchunk": qchunk} if (
-            name == "reference" and qchunk != 8
-        ) else {}
+        if qchunk is not None and name != "reference":
+            raise ValueError(
+                f"qchunk={qchunk} is only honoured by the 'reference' "
+                f"backend, but backend={name!r} would silently ignore it; "
+                "drop qchunk or use backend='reference'"
+            )
+        opts = {"qchunk": qchunk} if qchunk is not None else {}
         return get_engine(self, name, **opts).search(
             qw, probes=probes, k=k, exclude=exclude, nav_query=nav_query
         )

@@ -28,6 +28,7 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from .fields import FieldSpec, concat_fields, split_fields
 
@@ -37,9 +38,41 @@ __all__ = [
     "nwd",
     "cosine_distance",
     "expand_weights",
+    "validate_weights",
 ]
 
 _EPS = 1e-12
+
+
+def validate_weights(w, spec: FieldSpec | None = None) -> np.ndarray:
+    """Check per-field weights at the API boundary; return them as float32.
+
+    The §4 reduction assumes *non-negative* weights with at least one
+    strictly positive entry: a negative weight breaks the theorem's ranking
+    equivalence (the weighted query is no longer a conic combination), and an
+    all-zero vector normalises ``Q_w`` to garbage (``0 / eps``) — both
+    previously flowed silently into :func:`weighted_query` and produced
+    NaN-ish rankings. Accepts ``(s,)`` or ``(nq, s)``; raises ``ValueError``
+    with the offending row, never silently repairs.
+    """
+    arr = np.asarray(w, np.float32)
+    if spec is not None and (arr.ndim == 0 or arr.shape[-1] != spec.s):
+        raise ValueError(
+            f"weights must have one entry per field "
+            f"({spec.s}: {list(spec.names)}), got shape {arr.shape}"
+        )
+    if not np.all(np.isfinite(arr)):
+        raise ValueError(f"field weights must be finite, got {arr.tolist()}")
+    if np.any(arr < 0):
+        raise ValueError(
+            f"field weights must be non-negative, got {arr.tolist()}"
+        )
+    if np.any(np.sum(arr, axis=-1) <= 0):
+        raise ValueError(
+            "field weights must include at least one positive entry "
+            f"(all-zero weights have no defined ranking), got {arr.tolist()}"
+        )
+    return arr
 
 
 def expand_weights(w: jnp.ndarray, spec: FieldSpec) -> jnp.ndarray:

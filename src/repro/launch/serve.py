@@ -1,18 +1,22 @@
 """Retrieval serving driver — the paper's system end to end.
 
-Builds the corpus, the FPF multi-clustering index, and serves batched
-dynamically-weighted queries through the pluggable engine layer
-(:mod:`repro.core.engine`), with exact brute-force verification:
+Builds the corpus and the FPF multi-clustering index behind a
+:class:`repro.core.Retriever`, then serves batched more-like-this
+:class:`repro.core.SearchRequest` objects with per-request dynamic field
+weights (the paper's setting) and verifies quality online against exact
+brute force:
 
     PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 64 \
         --probes 12 --k 10 --backend fused
 
 ``--backend`` selects the execution path (``auto`` picks fused on TPU,
 sharded on multi-device hosts, reference otherwise); ``--compare`` serves the
-same batch through every runnable backend on the same index and prints a
-per-backend latency/recall table. Also exposes ``serve_requests`` for the
-examples and tests. LM serving (prefill/decode) lives in examples/serve_lm.py;
-this driver is the paper's own serving loop.
+same request batch through every runnable backend on the same index and
+prints a per-backend latency/recall table. The raw ``(scores, ids,
+n_scored)`` tuple surface lives only inside :mod:`repro.core.engine` — this
+driver speaks requests and responses exclusively. LM serving
+(prefill/decode) lives in examples/serve_lm.py; this driver is the paper's
+own serving loop.
 """
 
 from __future__ import annotations
@@ -25,24 +29,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    ClusterPruneIndex,
+    Retriever,
+    SearchRequest,
     available_backends,
     brute_force_bottomk,
     brute_force_topk,
     competitive_recall,
-    get_engine,
     normalized_aggregate_goodness,
     pick_backend,
     weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
 
-__all__ = ["build_index", "serve_requests", "main"]
+__all__ = ["build_index", "build_retriever", "make_requests",
+           "serve_requests", "main"]
 
 
 def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
                 n_clusterings: int = 3, seed: int = 0,
                 pack_major: bool | None = None):
+    from repro.core import ClusterPruneIndex
+
     docs_np, spec, _ = make_corpus(CorpusConfig(n_docs=n_docs, seed=seed))
     docs = jnp.asarray(docs_np)
     if k_clusters is None:
@@ -54,18 +61,39 @@ def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
     return index, docs, spec
 
 
-def serve_requests(index, queries, weights, *, probes: int, k: int,
-                   exclude=None, engine=None, backend: str = "reference"):
-    """One serving batch: (nq, D) queries + (nq, s) per-request weights.
+def build_retriever(n_docs: int = 20_000, *, backend: str = "auto",
+                    k_clusters: int | None = None, n_clusterings: int = 3,
+                    seed: int = 0, pack_major: bool | None = None):
+    """Corpus + index + facade in one call -> (retriever, docs, spec)."""
+    index, docs, spec = build_index(
+        n_docs, k_clusters=k_clusters, n_clusterings=n_clusterings,
+        seed=seed, pack_major=pack_major,
+    )
+    return Retriever(index, backend=backend), docs, spec
 
-    ``engine`` (a :class:`repro.core.SearchEngine`) or ``backend`` (a name)
-    picks the execution path; the default preserves the historical pure-JAX
-    reference behaviour.
+
+def make_requests(qids, weights, spec, *, probes: int, k: int,
+                  backend: str | None = None) -> list[SearchRequest]:
+    """Per-user more-like-this requests with field-name weights.
+
+    One request per query document id; each carries its own dynamic weight
+    dict (the paper's per-query user weights). MLT requests self-exclude
+    automatically.
     """
-    if engine is None:
-        engine = get_engine(index, backend)
-    qw = weighted_query(queries, weights, index.spec)
-    return engine.search(qw, probes=probes, k=k, exclude=exclude), qw
+    weights = np.asarray(weights, np.float32)
+    return [
+        SearchRequest(
+            like=int(qid),
+            weights=dict(zip(spec.names, map(float, w))),
+            probes=probes, k=k, backend=backend,
+        )
+        for qid, w in zip(np.asarray(qids), weights)
+    ]
+
+
+def serve_requests(retriever: Retriever, requests):
+    """Serve a batch through the facade -> list[SearchResponse]."""
+    return retriever.search(requests)
 
 
 def main():
@@ -79,8 +107,8 @@ def main():
                     choices=("auto",) + available_backends(),
                     help="search engine backend (auto = platform pick)")
     ap.add_argument("--compare", action="store_true",
-                    help="serve through every runnable backend and report "
-                         "per-backend latency on the same index")
+                    help="serve the same requests through every runnable "
+                         "backend and report per-backend latency")
     args = ap.parse_args()
 
     # Materialise the bucket-major layout at build time whenever the fused
@@ -88,62 +116,71 @@ def main():
     picked = pick_backend() if args.backend == "auto" else args.backend
     need_major = args.compare or picked == "fused"
     t0 = time.time()
-    index, docs, spec = build_index(
-        args.docs, seed=args.seed, pack_major=True if need_major else None,
+    retriever, docs, spec = build_retriever(
+        args.docs, backend=args.backend, seed=args.seed,
+        pack_major=True if need_major else None,
     )
+    index = retriever.index
     print(f"[serve] index built in {time.time() - t0:.1f}s "
           f"(K={index.leaders.shape[1]}, T={index.leaders.shape[0]}"
           f"{', bucket-major packed' if index.bucket_data is not None else ''})")
 
     rng = np.random.default_rng(args.seed)
     qids = rng.choice(args.docs, args.queries, replace=False)
-    queries = docs[qids]
     # per-request dynamic weights (the paper's setting)
     w = rng.dirichlet([1.0] * spec.s, size=args.queries).astype(np.float32)
-    weights = jnp.asarray(w)
-    exclude = jnp.asarray(qids, jnp.int32)
 
-    # Exact ground truth: identical across backends, computed once.
-    qw = weighted_query(queries, weights, spec)
+    # Exact ground truth: identical across backends, computed once from the
+    # same §4 reduction the retriever applies internally.
+    qw = weighted_query(docs[qids], jnp.asarray(w), spec)
+    exclude = jnp.asarray(qids, jnp.int32)
     gt_s, gt_i = brute_force_topk(docs, qw, args.k, exclude=exclude)
     far_s, _ = brute_force_bottomk(docs, qw, args.k, exclude=exclude)
 
-    if args.compare:
-        backends = list(available_backends())
-    else:
-        # "auto" resolves against the built index (degrades gracefully when
-        # e.g. the sharded divisibility precondition fails); an explicitly
-        # infeasible backend is reported by the loop's skip path.
-        backends = [
-            pick_backend(index) if args.backend == "auto" else args.backend
-        ]
+    backends = (
+        list(available_backends()) if args.compare else [retriever.backend]
+    )
     report = []
+    sample = None
     for name in backends:
+        requests = make_requests(
+            qids, w, spec, probes=args.probes, k=args.k, backend=name,
+        )
         try:
-            engine = get_engine(index, name)
+            responses = serve_requests(retriever, requests)
         except Exception as e:  # e.g. sharded divisibility on odd corpora
             print(f"[serve] backend={name}: skipped ({e})")
             continue
-        t0 = time.time()
-        scores, ids, n_scored = engine.search(
-            qw, probes=args.probes, k=args.k, exclude=exclude,
+        dt = responses[0].latency_s           # whole-batch engine wall time
+        served = responses[0].backend
+        if sample is None:
+            sample = responses[0]
+        ids = np.stack([r.doc_ids for r in responses])
+        scores = np.stack([r.scores for r in responses])
+        n_scored = np.asarray([r.n_scored for r in responses], np.float32)
+        cr = float(jnp.mean(competitive_recall(jnp.asarray(ids), gt_i)))
+        nag = float(jnp.mean(normalized_aggregate_goodness(
+            jnp.asarray(scores), gt_s, far_s
+        )))
+        frac = float(np.mean(n_scored)) / args.docs
+        report.append((served, dt, cr, nag, frac))
+        print(f"[serve] backend={served}: {args.queries} requests in "
+              f"{dt * 1e3:.1f} ms ({dt / args.queries * 1e3:.2f} ms/request)")
+        print(f"[serve] backend={served}: recall@{args.k} = "
+              f"{cr:.2f}/{args.k}, NAG = {nag:.4f}, "
+              f"scored {frac:.1%} of corpus")
+
+    if sample is not None and sample.hits:
+        best = sample.hits[0]
+        parts = ", ".join(
+            f"{n}={v:.3f}" for n, v in best.field_scores.items()
         )
-        jax.block_until_ready(scores)
-        dt = time.time() - t0
-        cr = float(jnp.mean(competitive_recall(ids, gt_i)))
-        nag = float(jnp.mean(
-            normalized_aggregate_goodness(scores, gt_s, far_s)
-        ))
-        frac = float(jnp.mean(n_scored)) / args.docs
-        report.append((name, dt, cr, nag, frac))
-        print(f"[serve] backend={name}: {args.queries} queries in "
-              f"{dt * 1e3:.1f} ms ({dt / args.queries * 1e3:.2f} ms/query)")
-        print(f"[serve] backend={name}: recall@{args.k} = {cr:.2f}/{args.k}, "
-              f"NAG = {nag:.4f}, scored {frac:.1%} of corpus")
+        print(f"[serve] sample hit for doc {int(qids[0])}: "
+              f"doc {best.doc_id} score {best.score:.3f} ({parts})")
 
     if len(report) > 1:
-        print("\n[serve] per-backend latency (same index, same batch)")
-        print("backend,ms_per_query,recall,nag,corpus_scanned")
+        print("\n[serve] per-backend latency (same index, same requests)")
+        print("backend,ms_per_request,recall,nag,corpus_scanned")
         for name, dt, cr, nag, frac in report:
             print(f"{name},{dt / args.queries * 1e3:.3f},{cr:.2f},"
                   f"{nag:.4f},{frac:.3f}")

@@ -1,0 +1,257 @@
+"""Typed retrieval API: request validation, probe planning, batching,
+per-field score decomposition, and — the acceptance bar — exact parity
+between ``Retriever.search`` responses and the raw ``engine.search`` tuples
+on the same index for every runnable backend."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterPruneIndex,
+    FieldSpec,
+    Hit,
+    Retriever,
+    SearchRequest,
+    SearchResponse,
+    aggregate_similarity,
+    get_engine,
+    normalize_fields,
+    plan_probes,
+    validate_weights,
+    weighted_query,
+)
+
+BACKENDS = ("reference", "fused", "sharded")
+
+
+@pytest.fixture(scope="module")
+def api_corpus():
+    """Gaussian corpus (no ties => unique top-k => exact parity)."""
+    spec = FieldSpec(names=("title", "authors", "abstract"),
+                     dims=(32, 32, 64))
+    x = jax.random.normal(jax.random.PRNGKey(11), (640, spec.total_dim))
+    return normalize_fields(x, spec), spec
+
+
+@pytest.fixture(scope="module")
+def retriever(api_corpus):
+    docs, spec = api_corpus
+    return Retriever.build(
+        docs, spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), pack_major=True, backend="reference",
+    )
+
+
+# ------------------------------------------------------------------ requests
+def test_request_validation():
+    q = jnp.ones((8,))
+    with pytest.raises(ValueError, match="exactly one of"):
+        SearchRequest()
+    with pytest.raises(ValueError, match="exactly one of"):
+        SearchRequest(query=q, like=3)
+    with pytest.raises(ValueError, match="k must be"):
+        SearchRequest(like=3, k=0)
+    with pytest.raises(ValueError, match="probes must be"):
+        SearchRequest(like=3, probes=0)
+    with pytest.raises(ValueError, match="not both"):
+        SearchRequest(like=3, probes=4, recall_target=0.9)
+    with pytest.raises(ValueError, match="recall_target"):
+        SearchRequest(like=3, recall_target=1.5)
+    with pytest.raises(ValueError, match="doc id"):
+        SearchRequest(like=-2)
+
+
+def test_weight_resolution_by_field_name(retriever):
+    spec = retriever.spec
+    req = SearchRequest(like=0, weights={"title": 0.6, "abstract": 0.4})
+    w = req.resolve_weights(spec)
+    np.testing.assert_allclose(w, [0.6, 0.0, 0.4])   # unnamed field -> 0
+    with pytest.raises(ValueError, match="unknown field"):
+        SearchRequest(like=0, weights={"tittle": 1.0}).resolve_weights(spec)
+    with pytest.raises(ValueError, match="one entry per field"):
+        SearchRequest(like=0, weights=(0.5, 0.5)).resolve_weights(spec)
+    # None -> equal weights
+    np.testing.assert_allclose(
+        SearchRequest(like=0).resolve_weights(spec), [1 / 3] * 3
+    )
+
+
+def test_query_routing_errors(retriever):
+    with pytest.raises(ValueError, match="out of range"):
+        retriever.search(SearchRequest(like=10**6))
+    with pytest.raises(ValueError, match="corpus concat dim"):
+        retriever.search(SearchRequest(query=jnp.ones((7,))))
+
+
+@pytest.mark.parametrize("bad", [(-0.5, 1.0, 0.5), (0.0, 0.0, 0.0)])
+def test_weights_validated_at_api_boundary(retriever, bad):
+    """Negative / all-zero weights raise instead of producing NaN rankings."""
+    with pytest.raises(ValueError, match="weights"):
+        retriever.search(SearchRequest(like=1, weights=bad))
+
+
+def test_validate_weights_batch_rows():
+    spec = FieldSpec(names=("a", "b"), dims=(4, 4))
+    ok = validate_weights(np.asarray([[0.5, 0.5], [1.0, 0.0]]), spec)
+    assert ok.dtype == np.float32
+    with pytest.raises(ValueError):
+        validate_weights(np.asarray([[0.5, 0.5], [0.0, 0.0]]), spec)
+    with pytest.raises(ValueError):
+        validate_weights(np.asarray([np.nan, 1.0]), spec)
+
+
+# ------------------------------------------------------------------- planner
+def test_plan_probes_monotone_and_bounded():
+    t, kc = 3, 110
+    budgets = [plan_probes(r, t, kc) for r in
+               (0.1, 0.5, 0.8, 0.9, 0.95, 0.99, 1.0)]
+    assert budgets == sorted(budgets)
+    assert all(t <= b <= t * kc for b in budgets)
+    assert plan_probes(1.0, t, kc) == t * kc       # exact search
+    with pytest.raises(ValueError):
+        plan_probes(0.0, t, kc)
+
+
+def test_recall_target_maps_to_probes(retriever):
+    t, kc = retriever.index.counts.shape
+    resp = retriever.search(SearchRequest(like=5, recall_target=0.9, k=4))
+    assert resp.probes == plan_probes(0.9, t, kc)
+
+
+# ----------------------------------------------------- parity (acceptance)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_retriever_parity_with_raw_engine(retriever, api_corpus, backend):
+    """Retriever hits == raw engine.search tuples (ids, scores, n_scored)."""
+    docs, spec = api_corpus
+    rng = np.random.default_rng(3)
+    qids = rng.choice(docs.shape[0], 12, replace=False)
+    wmat = rng.dirichlet([1.0] * spec.s, 12).astype(np.float32)
+    reqs = [
+        SearchRequest(like=int(q), weights=dict(zip(spec.names, map(float, w))),
+                      probes=6, k=10, backend=backend)
+        for q, w in zip(qids, wmat)
+    ]
+    responses = retriever.search(reqs)
+
+    qw = weighted_query(docs[qids], jnp.asarray(wmat), spec)
+    s, i, n = get_engine(retriever.index, backend).search(
+        qw, probes=6, k=10, exclude=jnp.asarray(qids, jnp.int32)
+    )
+    assert np.array_equal(
+        np.stack([r.doc_ids for r in responses]), np.asarray(i)
+    ), backend
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in responses]), np.asarray(s), atol=1e-6
+    )
+    assert np.array_equal(
+        np.asarray([r.n_scored for r in responses]), np.asarray(n)
+    ), backend
+    assert all(r.backend == backend for r in responses)
+
+
+# -------------------------------------------------------------- decomposition
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("form", ("keyword", "mlt"))
+def test_field_decomposition(retriever, api_corpus, backend, form):
+    """Per-field contributions sum to the aggregate score and rank hits
+    identically to the definitional aggregate_similarity — for keyword and
+    more-like-this requests on every runnable backend."""
+    docs, spec = api_corpus
+    w = {"title": 0.5, "authors": 0.2, "abstract": 0.3}
+    if form == "mlt":
+        req = SearchRequest(like=37, weights=w, probes=6, k=8,
+                            backend=backend)
+        qvec, excl = docs[37], 37
+    else:
+        qvec = docs[101]
+        req = SearchRequest(query=qvec, weights=w, probes=6, k=8,
+                            exclude=101, backend=backend)
+        excl = 101
+    resp = retriever.search(req)
+    assert len(resp.hits) > 0 and excl not in resp.ids
+
+    wv = jnp.asarray([w[n] for n in spec.names])
+    for h in resp.hits:
+        # (1) exact split: contributions sum to the aggregate engine score
+        assert set(h.field_scores) == set(spec.names)
+        np.testing.assert_allclose(
+            sum(h.field_scores.values()), h.score, atol=1e-5
+        )
+    # (2) ranking-consistent with the paper's definitional WS form
+    hit_docs = docs[jnp.asarray(resp.ids)]
+    ws = aggregate_similarity(qvec, wv, hit_docs, spec)
+    order = np.argsort(-np.asarray(ws), kind="stable")
+    assert np.array_equal(order, np.arange(len(resp.hits))), (
+        f"{backend}/{form}: hit order disagrees with aggregate_similarity"
+    )
+
+
+def test_hit_field_scores_reflect_weights(retriever, api_corpus):
+    """A zero-weighted field contributes (numerically) nothing."""
+    resp = retriever.search(
+        SearchRequest(like=12, weights={"title": 1.0}, probes=6, k=5)
+    )
+    for h in resp.hits:
+        assert abs(h.field_scores["authors"]) < 1e-6
+        assert abs(h.field_scores["abstract"]) < 1e-6
+
+
+# ------------------------------------------------------------------ batching
+def test_heterogeneous_batch_routing(retriever, api_corpus):
+    """Mixed forms/shapes come back in request order with correct grouping."""
+    docs, spec = api_corpus
+    reqs = [
+        SearchRequest(like=3, probes=6, k=5),
+        SearchRequest(query=docs[9], weights=(0.2, 0.2, 0.6), probes=6, k=5,
+                      exclude=9),
+        SearchRequest(like=4, probes=9, k=3),
+        SearchRequest(like=8, probes=6, k=5, backend="fused"),
+    ]
+    out = retriever.search(reqs)
+    assert [type(r) for r in out] == [SearchResponse] * 4
+    # group shapes: reqs 0+1 share (reference, 6, 5); 2 and 3 are alone
+    assert out[0].batch_size == 2 and out[1].batch_size == 2
+    assert out[2].batch_size == 1 and out[2].probes == 9
+    assert out[3].backend == "fused" and out[3].batch_size == 1
+    # batched result == the same request served alone
+    solo = retriever.search(reqs[0])
+    assert np.array_equal(out[0].doc_ids, solo.doc_ids)
+    np.testing.assert_allclose(out[0].scores, solo.scores, atol=1e-6)
+    assert isinstance(solo, SearchResponse)
+    assert retriever.search([]) == []
+
+
+def test_mlt_self_exclusion_default(retriever):
+    resp = retriever.search(SearchRequest(like=21, probes=8, k=10))
+    assert 21 not in resp.ids
+    # explicit exclude=-1 disables the self-mask: the doc is its own 1-NN
+    resp2 = retriever.search(SearchRequest(like=21, probes=8, k=10,
+                                           exclude=-1))
+    assert resp2.hits[0].doc_id == 21
+
+
+def test_response_surface(retriever):
+    resp = retriever.search(SearchRequest(like=2, probes=6, k=5))
+    assert len(resp) == len(resp.hits) and list(resp) == list(resp.hits)
+    assert resp.doc_ids.shape == (5,) and resp.scores.shape == (5,)
+    assert resp.latency_s > 0 and resp.n_scored > 0
+    assert isinstance(resp.hits[0], Hit)
+    # scores come back best-first
+    live = resp.scores[resp.doc_ids >= 0]
+    assert np.all(np.diff(live) <= 1e-6)
+
+
+# ------------------------------------------------- deprecated shim (qchunk)
+def test_index_search_qchunk_silent_drop_fixed(retriever, api_corpus):
+    """qchunk with a non-reference backend raises instead of being ignored."""
+    docs, _ = api_corpus
+    idx = retriever.index
+    qw = docs[5:7]
+    with pytest.raises(ValueError, match="qchunk"):
+        idx.search(qw, probes=6, k=5, qchunk=4, backend="fused")
+    # reference still honours it, and the default passes everywhere
+    s, i, n = idx.search(qw, probes=6, k=5, qchunk=4, backend="reference")
+    s2, i2, n2 = idx.search(qw, probes=6, k=5, backend="fused")
+    assert np.array_equal(np.asarray(i), np.asarray(i2))

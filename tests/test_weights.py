@@ -20,6 +20,7 @@ from repro.core import (
     expand_weights,
     normalize_fields,
     nwd,
+    validate_weights,
     weighted_query,
 )
 
@@ -85,6 +86,32 @@ def test_expand_weights_layout():
     assert e.shape == (SPEC.total_dim,)
     for i, sl in enumerate(SPEC.slices()):
         assert bool(jnp.all(e[sl] == w[i]))
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    w=st.lists(st.floats(-5.0, 5.0, allow_nan=False), min_size=3, max_size=3),
+    scale=st.floats(0.0, 1.0),
+)
+def test_validate_weights_property(w, scale):
+    """API-boundary guard: validate_weights accepts exactly the conic
+    weights the §4 theorem covers (non-negative, not all zero) and rejects
+    everything else — on which weighted_query stays finite."""
+    arr = np.asarray(w, np.float32)
+    legal = bool(np.all(arr >= 0) and np.sum(arr) > 0)
+    if legal:
+        out = validate_weights(arr, SPEC)
+        np.testing.assert_allclose(out, arr)
+        q = _unit_fields(7, 1)[0]
+        qn = weighted_query(q, jnp.asarray(out), SPEC)
+        assert bool(jnp.all(jnp.isfinite(qn)))
+    else:
+        with pytest.raises(ValueError):
+            validate_weights(arr, SPEC)
+    # all-zero from scaling a legal vector by 0 is also rejected
+    if legal and scale == 0.0:
+        with pytest.raises(ValueError):
+            validate_weights(arr * scale, SPEC)
 
 
 def test_extended_triangle_inequality():
