@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     CellDecIndex, ClusterPruneIndex, Retriever, SearchRequest,
-    available_backends,
+    available_backends, calibrate_index,
 )
 from repro.data import CorpusConfig, make_corpus
 
@@ -47,7 +47,7 @@ def _mlt_requests(qids, spec, *, probes, backend=None):
 
 
 def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
-        backends=None):
+        backends=None, calibrate: bool = False):
     sz = bench_sizes(scale)
     docs_np, spec, _ = make_corpus(CorpusConfig(
         n_docs=sz["n_docs"], field_dims=sz["field_dims"],
@@ -62,6 +62,13 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
     ours = ClusterPruneIndex.build(docs, spec, kc, n_clusterings=3,
                                    method="fpf", key=key, pack_major=True)
     retriever = Retriever(ours, backend="reference")
+    if calibrate:
+        # Annotate each timed probe budget with the calibrated planner's
+        # fitted recall, so the time-vs-quality tradeoff reads off one table.
+        ladder = calibrate_index(ours, seed=seed)
+        print("# planner (calibrated): " + ", ".join(
+            f"probes {p} -> recall {ladder.predicted_recall(p):.2f}"
+            for p in probe_grid))
     celldec = CellDecIndex.build(docs, spec, kc, method="kmeans", iters=10,
                                  key=key)
 
@@ -114,5 +121,10 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18),
 
 
 if __name__ == "__main__":
-    args = std_parser(__doc__).parse_args()
-    run(args.scale, args.seed)
+    parser = std_parser(__doc__)
+    parser.add_argument(
+        "--calibrate", action="store_true",
+        help="fit the per-index probe ladder and annotate each probe "
+             "budget with its predicted recall")
+    args = parser.parse_args()
+    run(args.scale, args.seed, calibrate=args.calibrate)

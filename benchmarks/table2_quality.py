@@ -12,6 +12,12 @@ PODS07 baselines predate the engine seam and keep their direct path.
 
 Expected (the paper's headline): Our (FPF x3) dominates CellDec and PODS07
 at equal probe budgets, with the gap widening for unequal weights.
+
+``--calibration`` switches to the planner-audit mode: calibrate the index
+(sample queries x Dirichlet weight draws -> probe sweep -> isotonic fit),
+then serve fresh random weight draws at a grid of ``recall_target`` values
+and report targeted vs planner-predicted vs achieved recall per draw — the
+honesty check for the ``recall_target=`` contract.
 """
 
 from __future__ import annotations
@@ -22,8 +28,9 @@ import jax.numpy as jnp
 
 from repro.core import (
     CellDecIndex, ClusterPruneIndex, Retriever, SearchRequest,
-    brute_force_bottomk, brute_force_topk, competitive_recall,
-    normalized_aggregate_goodness, weighted_query,
+    brute_force_bottomk, brute_force_topk, calibrate_index,
+    competitive_recall, normalized_aggregate_goodness, recall_fraction,
+    weighted_query,
 )
 from repro.data import CorpusConfig, make_corpus
 
@@ -109,6 +116,72 @@ def run(scale: str = "quick", seed: int = 0, probe_grid=(3, 6, 9, 12, 18)):
     return results
 
 
+def run_calibration(scale: str = "quick", seed: int = 0,
+                    targets=(0.5, 0.7, 0.8, 0.9, 0.95), n_draws: int = 8):
+    """Planner audit: achieved vs targeted recall across random weight draws.
+
+    Calibration and evaluation use DISJOINT seeds (fit on draw set A, audit
+    on draw set B), so the table measures generalisation of the fitted
+    ladder to unseen user weights — the paper's dynamic setting.
+    """
+    sz = bench_sizes(scale)
+    docs_np, spec, _ = make_corpus(CorpusConfig(
+        n_docs=sz["n_docs"], field_dims=sz["field_dims"],
+        vocab_sizes=sz["vocab_sizes"], n_topics=sz["n_topics"],
+        topic_mix_alpha=sz["topic_mix_alpha"],
+        noise_terms=sz["noise_terms"], seed=seed,
+    ))
+    docs = jnp.asarray(docs_np)
+    index = ClusterPruneIndex.build(
+        docs, spec, sz["k_clusters"], n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(seed),
+    )
+    ladder = calibrate_index(index, seed=seed)
+    print(f"\n# Planner calibration audit (n={sz['n_docs']}, "
+          f"K={sz['k_clusters']}, k={K_NN}, {n_draws} held-out weight draws)")
+    print("# fitted ladder: " + ", ".join(
+        f"{p}->{r:.2f}" for p, r in zip(ladder.probes, ladder.recall)))
+
+    retriever = Retriever(index, backend="reference")
+    rng = np.random.default_rng(seed + 1)        # disjoint from calibration
+    nq = min(32, sz["n_queries"])
+    results = {}
+    print("target,probes,predicted,achieved_mean,achieved_min,achieved_max")
+    for target in targets:
+        per_draw = []
+        for _ in range(n_draws):
+            qids = rng.choice(sz["n_docs"], nq, replace=False)
+            w = rng.dirichlet(np.ones(spec.s)).astype(np.float32)
+            reqs = [
+                SearchRequest(like=int(q), weights=tuple(map(float, w)),
+                              recall_target=target, k=K_NN)
+                for q in qids
+            ]
+            responses = retriever.search(reqs)
+            qw = weighted_query(
+                docs[jnp.asarray(qids)],
+                jnp.tile(jnp.asarray(w)[None], (nq, 1)), spec,
+            )
+            _, gt_i = brute_force_topk(
+                docs, qw, K_NN, exclude=jnp.asarray(qids, jnp.int32))
+            ids = jnp.asarray(np.stack([r.doc_ids for r in responses]))
+            per_draw.append(float(jnp.mean(recall_fraction(ids, gt_i))))
+        probes, predicted = responses[0].probes, responses[0].predicted_recall
+        results[target] = (probes, predicted, per_draw)
+        print(f"{target:.2f},{probes},{predicted:.3f},"
+              f"{np.mean(per_draw):.3f},{min(per_draw):.3f},"
+              f"{max(per_draw):.3f}")
+    return results
+
+
 if __name__ == "__main__":
-    args = std_parser(__doc__).parse_args()
-    run(args.scale, args.seed)
+    parser = std_parser(__doc__)
+    parser.add_argument(
+        "--calibration", action="store_true",
+        help="audit the calibrated planner (achieved vs targeted recall "
+             "across held-out weight draws) instead of the Table-2 grid")
+    args = parser.parse_args()
+    if args.calibration:
+        run_calibration(args.scale, args.seed)
+    else:
+        run(args.scale, args.seed)

@@ -20,9 +20,12 @@ print(f"corpus: {docs.shape[0]} docs, fields {spec.names} dims {spec.dims}")
 
 # 2. ONE weight-free retriever (the paper's point: pre-processing never sees
 #    the user weights); FPF k-center clustering x3 independent clusterings,
-#    "auto" routes to the platform's fastest engine backend
+#    "auto" routes to the platform's fastest engine backend. calibrate= fits
+#    the per-index recall->probes ladder at build (sampled queries x random
+#    weight draws, probe sweep, isotonic fit) so recall_target= is honest.
 retriever = Retriever.build(docs, spec, k_clusters=90, n_clusterings=3,
-                            method="fpf")
+                            method="fpf",
+                            calibrate={"n_queries": 32, "n_weight_draws": 4})
 print(f"search backend: {retriever.backend}")
 
 # 3. user requests with PER-REQUEST field weights, by field name — a query
@@ -60,3 +63,11 @@ print(f"recall@10 = {recall:.2f}/10 scanning "
       f"{mean_scored / 8000:.1%} of the corpus "
       f"({responses[0].backend} backend, "
       f"{responses[0].latency_s * 1e3:.1f} ms for the batch)")
+
+# 5. or ask for a recall level instead of a probe budget: the calibrated
+#    per-index ladder picks the budget, and the response says what recall
+#    that budget is predicted to deliver on THIS index.
+resp = retriever.search(SearchRequest(like=int(qids[0]), weights=wdicts[0],
+                                      k=10, recall_target=0.9))
+print(f"recall_target=0.9 -> planner chose {resp.probes} probes "
+      f"(predicted recall {resp.predicted_recall:.2f})")

@@ -44,14 +44,18 @@ gt_s, gt_i = brute_force_topk(docs, qw, 10)
 
 # the paper's pruned index (weight-free build!) behind the Retriever
 # facade — "auto" routes to the platform's fastest backend; each request
-# is a user: 4 interest vectors + that user's interest weights by name
-retriever = Retriever.build(docs, spec, 250, n_clusterings=3, method="fpf")
+# is a user: 4 interest vectors + that user's interest weights by name.
+# Instead of hand-picking a probe budget we ask for recall >= 0.9 and let
+# the per-index calibrated ladder (fit on THIS candidate set, marginalised
+# over interest-weight draws) choose it.
+retriever = Retriever.build(docs, spec, 250, n_clusterings=3, method="fpf",
+                            calibrate={"n_queries": 32, "n_weight_draws": 3})
 print(f"retrieval backend: {retriever.backend}")
 requests = [
     SearchRequest(
         query=[interests[u, i] for i in range(cfg.n_interests)],
         weights=dict(zip(spec.names, map(float, w[u]))),
-        probes=24, k=10,
+        recall_target=0.9, k=10,
     )
     for u in range(8)
 ]
@@ -62,6 +66,8 @@ mean_scored = float(np.mean([r.n_scored for r in responses]))
 top = responses[0].hits[0]
 mix = ", ".join(f"{n}={v:.3f}" for n, v in top.field_scores.items())
 print(f"user 0 -> item {top.doc_id}: which interest matched? {mix}")
-print(f"pruned retrieval recall@10 = {rec:.2f}/10, scanning "
+print(f"pruned retrieval recall@10 = {rec:.2f}/10 "
+      f"(target 0.9 -> {responses[0].probes} probes, predicted "
+      f"{responses[0].predicted_recall:.2f}), scanning "
       f"{mean_scored / N_ITEMS:.1%} of candidates "
       f"(vs 100% for brute force)")

@@ -3,8 +3,17 @@ typed requests — more-like-this and keyword-vector queries, per-request
 weights, mixed k / probe budgets and recall targets — and verify quality
 online (the paper's system as a service).
 
-    PYTHONPATH=src python examples/serve_retrieval.py
+The recall-target half of the batch exercises the calibrated planner: the
+retriever is created with ``calibrate=True``, so the first ``recall_target=``
+request fits the per-index recall->probes ladder (sample queries x Dirichlet
+weight draws, probe sweep, isotonic fit) and the responses carry the
+planner's predicted recall, which we check against achieved recall.
+
+    PYTHONPATH=src python examples/serve_retrieval.py             # 20k docs
+    PYTHONPATH=src python examples/serve_retrieval.py --docs 2000 # CI smoke
 """
+
+import argparse
 
 import jax.numpy as jnp
 import numpy as np
@@ -14,28 +23,39 @@ from repro.core import (
 )
 from repro.launch.serve import build_retriever
 
-N_DOCS, K = 20_000, 10
-retriever, docs, spec = build_retriever(N_DOCS, backend="auto")
+ap = argparse.ArgumentParser()
+ap.add_argument("--docs", type=int, default=20_000,
+                help="corpus size (CI uses 2000)")
+ap.add_argument("--queries", type=int, default=128)
+args = ap.parse_args()
+N_DOCS, N_Q, K = args.docs, min(args.queries, args.docs // 4), 10
+
+retriever, docs, spec = build_retriever(
+    N_DOCS, backend="auto", calibrate=True,
+    calibrate_opts={"n_queries": 48, "n_weight_draws": 4},
+)
 print(f"[serve_retrieval] backend={retriever.backend}, "
-      f"fields={spec.names}")
+      f"fields={spec.names}, docs={N_DOCS}")
 
 rng = np.random.default_rng(0)
-qids = rng.choice(N_DOCS, 128, replace=False)
-wmat = rng.dirichlet([1.0] * spec.s, size=128).astype(np.float32)
+qids = rng.choice(N_DOCS, N_Q, replace=False)
+wmat = rng.dirichlet([1.0] * spec.s, size=N_Q).astype(np.float32)
+half = N_Q // 2
 
 # Heterogeneous request batch — the facade groups compatible execution
 # shapes into one engine call each and returns responses in order:
 #   first half: more-like-this with explicit probe budgets,
-#   second half: raw keyword-embedding vectors with a recall target the
-#   planner maps to a probe budget.
+#   second half: raw keyword-embedding vectors with a recall target that
+#   the CALIBRATED per-index ladder maps to a probe budget (the first such
+#   request pays the one-off calibration sweep).
 requests = [
     SearchRequest(like=int(qid), weights=dict(zip(spec.names, map(float, w))),
                   probes=12, k=K)
-    for qid, w in zip(qids[:64], wmat[:64])
+    for qid, w in zip(qids[:half], wmat[:half])
 ] + [
     SearchRequest(query=docs[int(qid)], weights=tuple(map(float, w)),
                   exclude=int(qid), recall_target=0.8, k=K)
-    for qid, w in zip(qids[64:], wmat[64:])
+    for qid, w in zip(qids[half:], wmat[half:])
 ]
 responses = retriever.search(requests)
 
@@ -53,5 +73,13 @@ for (backend, probes, k), rs in sorted(by_shape.items()):
     print(f"[serve_retrieval] {len(rs)} requests via {backend} "
           f"(probes={probes}, k={k}): {rs[0].latency_s * 1e3:.1f} ms/batch, "
           f"scanned {scanned:.1%} of corpus")
+
+# the planner's promise vs what the recall-target half actually achieved
+planned = responses[half:]
+achieved = float(jnp.mean(
+    competitive_recall(ids[half:], gt_i[half:]))) / K
+print(f"[serve_retrieval] recall_target=0.8 half: planner chose "
+      f"{planned[0].probes} probes, predicted recall "
+      f"{planned[0].predicted_recall:.2f}, achieved {achieved:.2f}")
 print(f"[serve_retrieval] batch recall@{K} = {recall:.2f}/{K} "
       f"over {len(requests)} mixed requests")

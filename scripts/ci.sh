@@ -3,9 +3,11 @@
 #
 #   scripts/ci.sh --fast    tier-1 unit tests only (the exact command
 #                           ROADMAP.md documents) — the pre-commit loop
-#   scripts/ci.sh           tier-1 tests PLUS a smoke run of the serving
-#                           driver, so API regressions in launch/serve.py
-#                           (the request->plan->engine->response path) fail
+#   scripts/ci.sh           tier-1 tests PLUS smoke runs of the serving
+#                           driver and the heterogeneous-batch example
+#                           (mixed MLT/vector requests, calibrated
+#                           recall_target planning), so API regressions in
+#                           the request->plan->engine->response path fail
 #                           CI, not just unit tests
 #
 # Extra args are forwarded to pytest in both modes.
@@ -27,4 +29,7 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: serving driver through the typed retrieval API"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --docs 2000 --queries 8
+  echo "[ci] smoke: heterogeneous batch + calibrated recall_target planning"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/serve_retrieval.py --docs 2000 --queries 32
 fi

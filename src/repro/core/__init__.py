@@ -11,6 +11,7 @@ Layers (top first — the typed API is the public surface):
   celldec     CellDec weight-region baseline [Singitham et al. VLDB'04]
   metrics     competitive recall, NAG, brute-force ground truth
   engine      pluggable SearchEngine backends: reference / fused / sharded
+  calibrate   per-index recall->probes ladder (sample -> sweep -> isotonic fit)
   distributed shard_map substrate consumed by the "sharded" backend
 """
 
@@ -37,7 +38,9 @@ from .engine import (
     pick_backend,
     register_backend,
     split_probes,
+    sweep_probes,
 )
+from .calibrate import ProbeLadder, calibrate_index, isotonic_fit
 from .api import (
     Hit,
     Retriever,
@@ -53,6 +56,7 @@ from .metrics import (
     competitive_recall,
     normalized_aggregate_goodness,
     quality_report,
+    recall_fraction,
 )
 
 __all__ = [
@@ -65,8 +69,9 @@ __all__ = [
     "kmeans_cluster", "random_leader_cluster",
     "CLUSTERERS", "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
     "BACKENDS", "SearchEngine", "available_backends", "get_engine",
-    "pick_backend", "register_backend", "split_probes",
+    "pick_backend", "register_backend", "split_probes", "sweep_probes",
+    "ProbeLadder", "calibrate_index", "isotonic_fit",
     "CellDecIndex", "region_of", "region_weights",
     "brute_force_bottomk", "brute_force_topk", "competitive_recall",
-    "normalized_aggregate_goodness", "quality_report",
+    "normalized_aggregate_goodness", "quality_report", "recall_fraction",
 ]

@@ -44,6 +44,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from typing import Iterable, Mapping, Sequence
 
 import jax
@@ -65,11 +66,14 @@ __all__ = [
 
 
 # ---------------------------------------------------------------- the planner
-# recall_target -> fraction of the T*K clusters to probe. Calibrated on the
-# synthetic Citeseer-like corpus at the Table-2 operating points (quick scale,
-# FPF x3): each rung is the smallest budget that met the target there. A
-# ladder (not a formula) keeps the mapping legible and monotone; targets
-# above the last rung mean "probe everything" = exact search.
+# STATIC FALLBACK ladder: recall_target -> fraction of the T*K clusters to
+# probe, calibrated ONCE on the synthetic Citeseer-like corpus at the Table-2
+# operating points (quick scale, FPF x3). The recall-vs-probes curve depends
+# on the clustering and the weight draw (PODS'07), so this constant is only
+# honest on corpora resembling that one — a Retriever consults the index's
+# fitted per-index ProbeLadder (repro.core.calibrate) first and warns when it
+# has to fall back here. Targets above the last rung mean "probe everything"
+# = exact search.
 _RECALL_LADDER: tuple[tuple[float, float], ...] = (
     (0.50, 0.04),
     (0.80, 0.10),
@@ -82,11 +86,13 @@ _RECALL_LADDER: tuple[tuple[float, float], ...] = (
 def plan_probes(
     recall_target: float, n_clusterings: int, k_clusters: int
 ) -> int:
-    """Map a recall target in (0, 1] to a total probe budget.
+    """Map a recall target in (0, 1] to a total probe budget (STATIC ladder).
 
     Monotone in the target, clamped to ``[n_clusterings, n_clusterings *
     k_clusters]`` (at least one probe per clustering; at most all clusters,
-    which degenerates to exact search).
+    which degenerates to exact search). This is the uncalibrated fallback —
+    an index carrying a fitted :class:`~repro.core.calibrate.ProbeLadder`
+    plans from measured recall on its own data instead.
     """
     if not 0.0 < recall_target <= 1.0:
         raise ValueError(
@@ -181,6 +187,9 @@ class SearchRequest:
             )
         else:
             w = np.asarray(self.weights, np.float32)
+            # validate_weights accepts batched (nq, s) rows by design; a
+            # request carries exactly one weight vector, so pin the shape
+            # here before the batch-tolerant checks.
             if w.shape != (spec.s,):
                 raise ValueError(
                     f"weights must have one entry per field "
@@ -241,7 +250,12 @@ class SearchResponse:
     -inf padded) for metrics code that wants rectangular batches.
     ``latency_s`` is the wall time of the engine call that served this
     request's batch of ``batch_size`` requests; ``n_scored`` is this
-    request's own Fig-1 distance-computation count.
+    request's own Fig-1 distance-computation count. ``predicted_recall`` is
+    the planner's fitted CR/k estimate for the probe budget that served this
+    request (from the index's calibrated ladder; the nominal target itself
+    when the static fallback planned it; None when no prediction exists) —
+    callers can audit the ``recall_target=`` promise against achieved
+    recall.
     """
 
     hits: tuple[Hit, ...]
@@ -252,6 +266,7 @@ class SearchResponse:
     backend: str
     probes: int
     batch_size: int
+    predicted_recall: float | None = None
 
     def __len__(self) -> int:
         return len(self.hits)
@@ -304,7 +319,8 @@ class Retriever:
     """
 
     def __init__(self, index: ClusterPruneIndex, *, backend: str = "auto",
-                 default_probes: int = 12):
+                 default_probes: int = 12, calibrate: bool = False,
+                 calibrate_opts: Mapping | None = None):
         from .engine import pick_backend
 
         self.index = index
@@ -312,6 +328,20 @@ class Retriever:
             pick_backend(index) if backend in (None, "auto") else backend
         )
         self.default_probes = default_probes
+        # ``calibrate=True``: an index without a fitted ladder gets one
+        # lazily, on the first recall_target= request (paid once); False
+        # falls back to the static plan_probes ladder with a warning.
+        self.calibrate = calibrate
+        self.calibrate_opts = dict(calibrate_opts or {})
+        # planning state, hoisted once: (T, K) never changes for a built
+        # index, and recall_target -> (probes, predicted recall) lookups
+        # repeat across requests, so both are cached here instead of being
+        # re-derived from index tensors on every request.
+        t, k_clusters = index.counts.shape
+        self._tk = (int(t), int(k_clusters))
+        self._plan_cache: dict[float, tuple[int, float]] = {}
+        self._plan_ladder: object | None = index.ladder
+        self._warned_static = False
 
     @classmethod
     def build(
@@ -324,7 +354,13 @@ class Retriever:
         default_probes: int = 12,
         **build_kwargs,
     ) -> "Retriever":
-        """Build the weight-free index and wrap it (one-stop constructor)."""
+        """Build the weight-free index and wrap it (one-stop constructor).
+
+        Pass ``calibrate=True`` (or a dict of
+        :func:`~repro.core.calibrate.calibrate_index` options) to fit the
+        per-index recall->probes ladder at build time; the retriever then
+        serves honest ``recall_target=`` requests from the first one.
+        """
         index = ClusterPruneIndex.build(docs, spec, k_clusters, **build_kwargs)
         return cls(index, backend=backend, default_probes=default_probes)
 
@@ -333,17 +369,69 @@ class Retriever:
         return self.index.spec
 
     # ------------------------------------------------------------- planning
-    def _plan(self, req: SearchRequest) -> tuple[str, int]:
-        """(backend name, probe budget) for one request."""
+    def _plan(self, req: SearchRequest) -> tuple[str, int, float | None]:
+        """(backend name, probe budget, predicted recall) for one request."""
         backend = req.backend or self.backend
         if req.probes is not None:
             probes = req.probes
+            predicted = self._predict_recall(probes)
         elif req.recall_target is not None:
-            t, k_clusters = self.index.counts.shape
-            probes = plan_probes(req.recall_target, t, k_clusters)
+            probes, predicted = self._plan_target(req.recall_target)
         else:
             probes = self.default_probes
-        return backend, probes
+            predicted = self._predict_recall(probes)
+        return backend, probes, predicted
+
+    def _predict_recall(self, probes: int) -> float | None:
+        """Fitted CR/k at an explicit budget — None without a ladder (the
+        static ladder maps targets to budgets, not budgets to recall)."""
+        ladder = self.index.ladder
+        return (
+            None if ladder is None
+            else float(ladder.predicted_recall(probes))
+        )
+
+    def _plan_target(self, target: float) -> tuple[int, float]:
+        """Map recall_target -> (probes, predicted recall), cached.
+
+        Consults the index's calibrated :class:`ProbeLadder`; with
+        ``calibrate=True`` a missing ladder is fitted lazily (once) on this
+        first request. Otherwise falls back to the static
+        :func:`plan_probes` ladder with a warning — the static rungs were
+        fit on ONE synthetic corpus and weight setting, so the target is
+        nominal there, not measured.
+        """
+        ladder = self.index.ladder
+        if ladder is None and self.calibrate:
+            from .calibrate import calibrate_index
+
+            ladder = calibrate_index(self.index, **self.calibrate_opts)
+        if ladder is not self._plan_ladder:       # fitted/replaced: re-plan
+            self._plan_cache.clear()
+            self._plan_ladder = ladder
+        cached = self._plan_cache.get(target)
+        if cached is not None:
+            return cached
+        if ladder is not None:
+            probes = ladder.plan(target)
+            predicted = float(ladder.predicted_recall(probes))
+        else:
+            if not self._warned_static:
+                warnings.warn(
+                    "index has no calibrated probe ladder; recall_target "
+                    "planning falls back to the static _RECALL_LADDER, "
+                    "which was fit on one synthetic corpus and one weight "
+                    "setting — the target is nominal, not measured. Build "
+                    "with calibrate=True or run "
+                    "repro.core.calibrate.calibrate_index(index).",
+                    stacklevel=3,
+                )
+                self._warned_static = True
+            t, k_clusters = self._tk
+            probes = plan_probes(target, t, k_clusters)
+            predicted = float(target)
+        self._plan_cache[target] = (probes, predicted)
+        return probes, predicted
 
     # -------------------------------------------------------------- serving
     def search(
@@ -384,7 +472,7 @@ class Retriever:
 
         # Group by execution shape; each group is one engine call.
         groups: dict[tuple[str, int, int], list[int]] = {}
-        for i, (r, (backend, probes)) in enumerate(zip(reqs, plans)):
+        for i, (r, (backend, probes, _)) in enumerate(zip(reqs, plans)):
             groups.setdefault((backend, probes, r.k), []).append(i)
 
         out: list[SearchResponse | None] = [None] * len(reqs)
@@ -425,5 +513,6 @@ class Retriever:
                     backend=engine.name,
                     probes=probes,
                     batch_size=len(rows),
+                    predicted_recall=plans[i][2],
                 )
         return out  # type: ignore[return-value]

@@ -54,6 +54,7 @@ __all__ = [
     "pick_backend",
     "get_engine",
     "split_probes",
+    "sweep_probes",
 ]
 
 
@@ -135,6 +136,57 @@ def get_engine(index, backend: str = "auto", **opts) -> SearchEngine:
     if name not in cache:
         cache[name] = cls(index)
     return cache[name]
+
+
+# Memory cap for the reference backend's (qchunk, m, D) candidate gather
+# during a sweep; high probe levels shrink the query chunk instead of
+# materialising a multi-GB tensor.
+_SWEEP_GATHER_BYTES = 512 * 2**20
+
+
+def sweep_probes(
+    index,
+    qw: jnp.ndarray,
+    *,
+    probe_grid,
+    k: int,
+    exclude: jnp.ndarray | None = None,
+    nav_query: jnp.ndarray | None = None,
+    backend: str | None = None,
+) -> list[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
+    """Run ONE engine over a probe grid — the planner-calibration sweep.
+
+    The engine (and with it the bucket-major pack, the sharded layout, every
+    per-index cache) is resolved once and reused across all probe levels, so
+    an L-level sweep costs L searches, not L index preparations. For the
+    ``reference`` backend the query-chunk size is adapted per level so the
+    ``(qchunk, candidates, D)`` gather stays within a fixed memory budget —
+    high probe budgets would otherwise materialise multi-GB intermediates.
+
+    Returns one ``(scores, ids, n_scored)`` tuple per grid entry, in grid
+    order.
+    """
+    name = pick_backend(index) if backend in (None, "auto") else backend
+    grid = [int(p) for p in probe_grid]
+    if not grid:
+        return []
+    b = int(index.buckets.shape[-1])
+    d = int(index.docs.shape[-1])
+    engine = get_engine(index, name)
+    out = []
+    for probes in grid:
+        eng = engine
+        if name == "reference":
+            qchunk = max(
+                1, min(8, _SWEEP_GATHER_BYTES // max(1, probes * b * d * 4))
+            )
+            if qchunk != getattr(engine, "qchunk", qchunk):
+                eng = get_engine(index, name, qchunk=int(qchunk))
+        out.append(
+            eng.search(qw, probes=probes, k=k, exclude=exclude,
+                       nav_query=nav_query)
+        )
+    return out
 
 
 # --------------------------------------------------------------------- shared

@@ -10,7 +10,12 @@ This module owns the *data structure only*: the padded ``(T, K, B)`` bucket-id
 tensor (sentinel = ``n``), the per-clustering assignment vectors, and — new
 with the engine layer — the bucket-major ``(T, K, B, D)`` corpus tensor that
 the fused Pallas backend consumes, materialised **once at build time** (or
-lazily on first fused search when the build deferred it for memory).
+lazily on first fused search when the build deferred it for memory). An index
+may additionally carry a fitted :class:`~repro.core.calibrate.ProbeLadder`
+(``ladder``, opt-in ``calibrate=`` at build or lazily on the first
+``recall_target=`` request) mapping recall targets to probe budgets measured
+on *this* index; it round-trips through :meth:`ClusterPruneIndex.save` /
+:meth:`ClusterPruneIndex.load`.
 
 Search *execution* lives in :mod:`repro.core.engine`: three interchangeable
 backends (``reference`` pure-JAX gather, ``fused`` Pallas ``bucket_score``,
@@ -102,6 +107,7 @@ class ClusterPruneIndex:
     method: str = "fpf"
     assign: np.ndarray | None = None        # (T, n) cluster of each doc
     bucket_data: jnp.ndarray | None = None  # (T, K, B, D) bucket-major corpus
+    ladder: object | None = None            # fitted ProbeLadder (or None)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -115,6 +121,7 @@ class ClusterPruneIndex:
         method: str = "fpf",
         key: jax.Array | None = None,
         pack_major: bool | None = None,
+        calibrate: bool | dict = False,
         **clusterer_kwargs,
     ) -> "ClusterPruneIndex":
         """Cluster T ways, pack buckets, and materialise the bucket-major
@@ -124,6 +131,14 @@ class ClusterPruneIndex:
         it to the first fused search, None (default) materialises it only on
         TPU (the fused auto-pick platform) and within a modest memory budget
         — either way the layout conversion happens exactly once per index.
+
+        ``calibrate``: opt-in planner calibration at build — True fits the
+        per-index recall->probes :class:`~repro.core.calibrate.ProbeLadder`
+        with default sampling, a dict passes options through to
+        :func:`~repro.core.calibrate.calibrate_index` (e.g. ``{"n_queries":
+        32, "seed": 1}``). False (default) leaves ``ladder=None``; a
+        ``Retriever`` built with ``calibrate=True`` will then fit it lazily
+        on the first ``recall_target=`` request.
         """
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -150,7 +165,7 @@ class ClusterPruneIndex:
                 and buckets.size * docs.shape[1] * docs.dtype.itemsize
                 <= _PACK_MAJOR_AUTO_BYTES
             )
-        return cls(
+        index = cls(
             spec=spec,
             docs=docs,
             leaders=jnp.stack(reps_l),
@@ -162,6 +177,13 @@ class ClusterPruneIndex:
                 pack_buckets_major(docs, buckets, n) if pack_major else None
             ),
         )
+        if calibrate:
+            from .calibrate import calibrate_index
+
+            calibrate_index(
+                index, **(calibrate if isinstance(calibrate, dict) else {})
+            )
+        return index
 
     # ------------------------------------------------------------- structure
     @property
@@ -201,6 +223,62 @@ class ClusterPruneIndex:
             ids.reshape(t * k_clusters, b).astype(jnp.int32),
         )
         return self._bucket_major_flat
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path) -> None:
+        """Serialize the index — including its calibrated ladder — to one
+        ``.npz``. The bucket-major tensor is NOT stored (it is a pure layout
+        transform, re-derived lazily on load); the ladder IS, so a loaded
+        index keeps its honest ``recall_target=`` planning without re-paying
+        the calibration sweep."""
+        import json
+
+        np.savez_compressed(
+            path,
+            docs=np.asarray(self.docs),
+            leaders=np.asarray(self.leaders),
+            buckets=np.asarray(self.buckets),
+            counts=np.asarray(self.counts),
+            assign=(
+                self.assign if self.assign is not None
+                else np.zeros((0, 0), np.int64)
+            ),
+            method=np.str_(self.method),
+            names=np.asarray(self.spec.names),
+            dims=np.asarray(self.spec.dims, np.int64),
+            ladder=np.str_(
+                "" if self.ladder is None
+                else json.dumps(self.ladder.to_dict())
+            ),
+        )
+
+    @classmethod
+    def load(cls, path) -> "ClusterPruneIndex":
+        """Inverse of :meth:`save` (ladder included)."""
+        import json
+
+        from .calibrate import ProbeLadder
+        from .fields import FieldSpec
+
+        z = np.load(path, allow_pickle=False)
+        assign = z["assign"]
+        ladder_json = str(z["ladder"])
+        return cls(
+            spec=FieldSpec(
+                names=tuple(str(n) for n in z["names"]),
+                dims=tuple(int(d) for d in z["dims"]),
+            ),
+            docs=jnp.asarray(z["docs"]),
+            leaders=jnp.asarray(z["leaders"]),
+            buckets=jnp.asarray(z["buckets"]),
+            counts=jnp.asarray(z["counts"]),
+            method=str(z["method"]),
+            assign=assign if assign.size else None,
+            ladder=(
+                ProbeLadder.from_dict(json.loads(ladder_json))
+                if ladder_json else None
+            ),
+        )
 
     # ----------------------------------------------------------------- search
     def search_weighted(

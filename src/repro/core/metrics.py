@@ -25,6 +25,7 @@ __all__ = [
     "brute_force_topk",
     "brute_force_bottomk",
     "competitive_recall",
+    "recall_fraction",
     "normalized_aggregate_goodness",
     "quality_report",
 ]
@@ -97,6 +98,12 @@ def competitive_recall(ret_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> jnp.ndarray
         ret_ids[..., :, None] >= 0
     )
     return jnp.sum(jnp.any(hit, axis=-1), axis=-1).astype(jnp.float32)
+
+
+def recall_fraction(ret_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> jnp.ndarray:
+    """``CR/k`` in ``[0, 1]`` per query — the planner-calibration target
+    variable (a ``recall_target=`` promise is a statement about this)."""
+    return competitive_recall(ret_ids, gt_ids) / gt_ids.shape[-1]
 
 
 def normalized_aggregate_goodness(

@@ -12,7 +12,12 @@ brute force:
 ``--backend`` selects the execution path (``auto`` picks fused on TPU,
 sharded on multi-device hosts, reference otherwise); ``--compare`` serves the
 same request batch through every runnable backend on the same index and
-prints a per-backend latency/recall table. The raw ``(scores, ids,
+prints a per-backend latency/recall table. ``--recall-target 0.9`` replaces
+the fixed ``--probes`` budget with a recall target served by the per-index
+calibrated planner (the index is calibrated right after build — sample
+queries x weight draws, probe sweep, isotonic fit), and the report prints
+the planner's predicted recall next to the achieved one, so the target is
+honest, not nominal. The raw ``(scores, ids,
 n_scored)`` tuple surface lives only inside :mod:`repro.core.engine` — this
 driver speaks requests and responses exclusively. LM serving
 (prefill/decode) lives in examples/serve_lm.py; this driver is the paper's
@@ -63,29 +68,39 @@ def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
 
 def build_retriever(n_docs: int = 20_000, *, backend: str = "auto",
                     k_clusters: int | None = None, n_clusterings: int = 3,
-                    seed: int = 0, pack_major: bool | None = None):
-    """Corpus + index + facade in one call -> (retriever, docs, spec)."""
+                    seed: int = 0, pack_major: bool | None = None,
+                    calibrate: bool = False, calibrate_opts=None):
+    """Corpus + index + facade in one call -> (retriever, docs, spec).
+
+    ``calibrate=True`` arms lazy planner calibration: the first
+    ``recall_target=`` request fits the per-index probe ladder
+    (``calibrate_opts`` passes sampling options through).
+    """
     index, docs, spec = build_index(
         n_docs, k_clusters=k_clusters, n_clusterings=n_clusterings,
         seed=seed, pack_major=pack_major,
     )
-    return Retriever(index, backend=backend), docs, spec
+    retriever = Retriever(index, backend=backend, calibrate=calibrate,
+                          calibrate_opts=calibrate_opts)
+    return retriever, docs, spec
 
 
-def make_requests(qids, weights, spec, *, probes: int, k: int,
+def make_requests(qids, weights, spec, *, probes: int | None = None,
+                  k: int = 10, recall_target: float | None = None,
                   backend: str | None = None) -> list[SearchRequest]:
     """Per-user more-like-this requests with field-name weights.
 
     One request per query document id; each carries its own dynamic weight
     dict (the paper's per-query user weights). MLT requests self-exclude
-    automatically.
+    automatically. Give either an explicit ``probes`` budget or a
+    ``recall_target`` the retriever's calibrated planner maps to one.
     """
     weights = np.asarray(weights, np.float32)
     return [
         SearchRequest(
             like=int(qid),
             weights=dict(zip(spec.names, map(float, w))),
-            probes=probes, k=k, backend=backend,
+            probes=probes, k=k, recall_target=recall_target, backend=backend,
         )
         for qid, w in zip(np.asarray(qids), weights)
     ]
@@ -101,6 +116,10 @@ def main():
     ap.add_argument("--docs", type=int, default=20_000)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--probes", type=int, default=12)
+    ap.add_argument("--recall-target", type=float, default=None,
+                    help="plan probes from a recall target via the per-index "
+                         "calibrated ladder (overrides --probes; the index "
+                         "is calibrated after build)")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto",
@@ -125,6 +144,20 @@ def main():
           f"(K={index.leaders.shape[1]}, T={index.leaders.shape[0]}"
           f"{', bucket-major packed' if index.bucket_data is not None else ''})")
 
+    if args.recall_target is not None:
+        from repro.core import calibrate_index
+
+        t0 = time.time()
+        # seed+1: the serving queries below are drawn with args.seed, so the
+        # printed achieved-vs-predicted recall is measured on HELD-OUT
+        # queries/weights, not the calibration set itself.
+        ladder = calibrate_index(index, seed=args.seed + 1)
+        rungs = ", ".join(
+            f"{p}->{r:.2f}" for p, r in zip(ladder.probes, ladder.recall)
+        )
+        print(f"[serve] planner calibrated in {time.time() - t0:.1f}s "
+              f"(probes->recall: {rungs})")
+
     rng = np.random.default_rng(args.seed)
     qids = rng.choice(args.docs, args.queries, replace=False)
     # per-request dynamic weights (the paper's setting)
@@ -143,12 +176,20 @@ def main():
     report = []
     sample = None
     for name in backends:
-        requests = make_requests(
-            qids, w, spec, probes=args.probes, k=args.k, backend=name,
-        )
+        if args.recall_target is not None:
+            requests = make_requests(
+                qids, w, spec, recall_target=args.recall_target, k=args.k,
+                backend=name,
+            )
+        else:
+            requests = make_requests(
+                qids, w, spec, probes=args.probes, k=args.k, backend=name,
+            )
         try:
             responses = serve_requests(retriever, requests)
         except Exception as e:  # e.g. sharded divisibility on odd corpora
+            if not args.compare:
+                raise  # single-backend run: an API regression must fail CI
             print(f"[serve] backend={name}: skipped ({e})")
             continue
         dt = responses[0].latency_s           # whole-batch engine wall time
@@ -166,9 +207,14 @@ def main():
         report.append((served, dt, cr, nag, frac))
         print(f"[serve] backend={served}: {args.queries} requests in "
               f"{dt * 1e3:.1f} ms ({dt / args.queries * 1e3:.2f} ms/request)")
+        planner = ""
+        if args.recall_target is not None:
+            planner = (f" [target {args.recall_target:.2f}, planner "
+                       f"predicted {responses[0].predicted_recall:.2f} "
+                       f"@ {responses[0].probes} probes]")
         print(f"[serve] backend={served}: recall@{args.k} = "
               f"{cr:.2f}/{args.k}, NAG = {nag:.4f}, "
-              f"scored {frac:.1%} of corpus")
+              f"scored {frac:.1%} of corpus{planner}")
 
     if sample is not None and sample.hits:
         best = sample.hits[0]

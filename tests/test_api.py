@@ -72,6 +72,10 @@ def test_weight_resolution_by_field_name(retriever):
         SearchRequest(like=0, weights={"tittle": 1.0}).resolve_weights(spec)
     with pytest.raises(ValueError, match="one entry per field"):
         SearchRequest(like=0, weights=(0.5, 0.5)).resolve_weights(spec)
+    # a request carries ONE weight vector — batched rows (which the
+    # batch-tolerant validate_weights would accept) are rejected here
+    with pytest.raises(ValueError, match="one entry per field"):
+        SearchRequest(like=0, weights=np.ones((2, 3))).resolve_weights(spec)
     # None -> equal weights
     np.testing.assert_allclose(
         SearchRequest(like=0).resolve_weights(spec), [1 / 3] * 3
@@ -115,9 +119,17 @@ def test_plan_probes_monotone_and_bounded():
 
 
 def test_recall_target_maps_to_probes(retriever):
+    """Uncalibrated index: recall_target falls back to the static ladder
+    (with a warning — the per-index calibrated path lives in
+    tests/test_calibrate.py) and reports the nominal target as predicted."""
     t, kc = retriever.index.counts.shape
-    resp = retriever.search(SearchRequest(like=5, recall_target=0.9, k=4))
+    with pytest.warns(UserWarning, match="static"):
+        resp = retriever.search(SearchRequest(like=5, recall_target=0.9, k=4))
     assert resp.probes == plan_probes(0.9, t, kc)
+    assert resp.predicted_recall == pytest.approx(0.9)
+    # the plan is cached per target and (T, K) hoisted at construction
+    assert retriever._tk == (int(t), int(kc))
+    assert retriever._plan_cache[0.9][0] == resp.probes
 
 
 # ----------------------------------------------------- parity (acceptance)
@@ -237,6 +249,7 @@ def test_response_surface(retriever):
     assert len(resp) == len(resp.hits) and list(resp) == list(resp.hits)
     assert resp.doc_ids.shape == (5,) and resp.scores.shape == (5,)
     assert resp.latency_s > 0 and resp.n_scored > 0
+    assert resp.predicted_recall is None   # explicit probes, no ladder
     assert isinstance(resp.hits[0], Hit)
     # scores come back best-first
     live = resp.scores[resp.doc_ids >= 0]

@@ -1,0 +1,327 @@
+"""Per-index planner calibration: isotonic ladder fit, monotonicity,
+achieved-recall-within-tolerance on the quick synthetic corpus (the
+acceptance bar: a calibrated index asked for recall_target=0.9 delivers
+mean CR/k >= 0.85 across 8 random held-out weight draws), the
+fallback-to-static-ladder warning path, lazy calibration through the
+Retriever, and round-trip of the serialized ladder (alone and with the
+index)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterPruneIndex,
+    ProbeLadder,
+    Retriever,
+    SearchRequest,
+    brute_force_topk,
+    calibrate_index,
+    get_engine,
+    isotonic_fit,
+    plan_probes,
+    recall_fraction,
+    sweep_probes,
+    weighted_query,
+)
+
+TARGETS = (0.3, 0.5, 0.7, 0.8, 0.9, 0.95, 0.99, 1.0)
+
+
+@pytest.fixture(scope="module")
+def calib_corpus():
+    """Quick synthetic corpus, shrunk: same topic-mixture hardness as the
+    benchmark 'quick' scale (neighbours straddle cluster boundaries, so the
+    recall-vs-probes curve actually spans instead of saturating at the
+    first rung)."""
+    from repro.data import CorpusConfig, make_corpus
+
+    docs, spec, _ = make_corpus(CorpusConfig(
+        n_docs=1500, field_dims=(64, 64, 128),
+        vocab_sizes=(800, 1200, 3000), n_topics=200, topic_mix_alpha=1.0,
+        noise_terms=(4, 2, 24), seed=3,
+    ))
+    return jnp.asarray(docs), spec
+
+
+@pytest.fixture(scope="module")
+def calibrated(calib_corpus):
+    """(index, ladder) with the ladder fit by the real sample->sweep->fit."""
+    docs, spec = calib_corpus
+    index = ClusterPruneIndex.build(
+        docs, spec, 40, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0),
+    )
+    ladder = calibrate_index(
+        index, n_queries=48, n_weight_draws=6, k=10, seed=0,
+    )
+    return index, ladder
+
+
+def _fresh_index(calib_corpus, key=1):
+    docs, spec = calib_corpus
+    return ClusterPruneIndex.build(
+        docs, spec, 40, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(key),
+    )
+
+
+# ------------------------------------------------------------- isotonic fit
+def test_isotonic_fit_pava():
+    y = [0.3, 0.1, 0.2, 0.6, 0.5, 0.9]
+    fit = isotonic_fit(y)
+    assert np.all(np.diff(fit) >= 0)                       # non-decreasing
+    np.testing.assert_allclose(np.mean(fit), np.mean(y))   # mass preserved
+    # already-monotone input is a fixed point
+    np.testing.assert_allclose(isotonic_fit([0.1, 0.2, 0.9]), [0.1, 0.2, 0.9])
+    # weighted merge: heavy early violator drags the pooled value
+    fit_w = isotonic_fit([0.9, 0.1], w=[9.0, 1.0])
+    np.testing.assert_allclose(fit_w, [0.82, 0.82])
+
+
+# ------------------------------------------------- ladder fit + monotonicity
+def test_ladder_monotone(calibrated):
+    """More probes => fitted recall never decreases; plan is monotone in the
+    target; predicted_recall is monotone in the budget."""
+    _, ladder = calibrated
+    assert list(ladder.probes) == sorted(ladder.probes)
+    assert np.all(np.diff(ladder.recall) >= 0)
+    plans = [ladder.plan(t) for t in TARGETS]
+    assert plans == sorted(plans)
+    total = ladder.total
+    assert all(ladder.n_clusterings <= p <= total for p in plans)
+    preds = [ladder.predicted_recall(p)
+             for p in range(ladder.n_clusterings, total + 1, 7)]
+    assert np.all(np.diff(preds) >= -1e-9)
+    assert ladder.predicted_recall(total) == 1.0           # exact search
+
+
+def test_ladder_plan_meets_fitted_curve(calibrated):
+    """plan(t) returns the SMALLEST measured budget whose fitted recall
+    meets t — planning is never laxer than the fit says it must be."""
+    _, ladder = calibrated
+    for t in (0.5, 0.8, 0.9):
+        p = ladder.plan(t)
+        if p < ladder.total:
+            assert ladder.predicted_recall(p) >= t - 1e-9
+            smaller = [q for q in ladder.probes if q < p]
+            if smaller:
+                assert ladder.predicted_recall(smaller[-1]) < t
+
+
+def test_sweep_probes_matches_per_level_search(calibrated, calib_corpus):
+    """The sweep entry point == one engine.search per level (it only hoists
+    the engine/bucket-major reuse, never changes semantics)."""
+    docs, _ = calib_corpus
+    index, _ = calibrated
+    qw = docs[10:18]
+    grid = (3, 9, 21)
+    sweep = sweep_probes(index, qw, probe_grid=grid, k=5, backend="reference")
+    assert len(sweep) == len(grid)
+    eng = get_engine(index, "reference")
+    for probes, (s, ids, n) in zip(grid, sweep):
+        s2, ids2, n2 = eng.search(qw, probes=probes, k=5)
+        assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+        assert np.array_equal(np.asarray(n), np.asarray(n2))
+
+
+# ------------------------------------------------- achieved recall (accept)
+def test_calibrated_recall_target_achieved(calibrated, calib_corpus):
+    """ACCEPTANCE: recall_target=0.9 on the calibrated index delivers mean
+    CR/k >= 0.85 across 8 random held-out Dirichlet weight draws."""
+    docs, spec = calib_corpus
+    index, _ = calibrated
+    retriever = Retriever(index, backend="reference")
+    rng = np.random.default_rng(7)            # disjoint from calibration seed
+    nq, n = 16, docs.shape[0]
+    fracs = []
+    for _ in range(8):
+        qids = rng.choice(n, nq, replace=False)
+        w = rng.dirichlet(np.ones(spec.s)).astype(np.float32)
+        responses = retriever.search([
+            SearchRequest(like=int(q), weights=tuple(map(float, w)),
+                          recall_target=0.9, k=10)
+            for q in qids
+        ])
+        qw = weighted_query(
+            docs[jnp.asarray(qids)], jnp.tile(jnp.asarray(w)[None], (nq, 1)),
+            spec,
+        )
+        _, gt_i = brute_force_topk(
+            docs, qw, 10, exclude=jnp.asarray(qids, jnp.int32))
+        ids = jnp.asarray(np.stack([r.doc_ids for r in responses]))
+        fracs.append(float(jnp.mean(recall_fraction(ids, gt_i))))
+    assert np.mean(fracs) >= 0.85, fracs
+    # and the response is auditable: the planner said what it expected
+    assert responses[0].predicted_recall is not None
+    assert responses[0].predicted_recall >= 0.85
+
+
+# ----------------------------------------------------- fallback + lazy paths
+def test_fallback_static_ladder_warns(calib_corpus):
+    """No ladder, calibrate=False: recall_target falls back to the static
+    plan_probes rungs WITH a warning, and predicted recall is the nominal
+    target (a promise, not a measurement)."""
+    index = _fresh_index(calib_corpus)
+    retriever = Retriever(index, backend="reference")
+    t, kc = index.counts.shape
+    with pytest.warns(UserWarning, match="static"):
+        resp = retriever.search(SearchRequest(like=3, recall_target=0.9, k=5))
+    assert resp.probes == plan_probes(0.9, int(t), int(kc))
+    assert resp.predicted_recall == pytest.approx(0.9)
+    # warned once, not per request
+    import warnings as _w
+    with _w.catch_warnings(record=True) as record:
+        _w.simplefilter("always")
+        retriever.search(SearchRequest(like=4, recall_target=0.8, k=5))
+    assert not [w for w in record if "static" in str(w.message)]
+
+
+def test_lazy_calibration_on_first_recall_target(calib_corpus):
+    """calibrate=True: the first recall_target request fits and stores the
+    ladder (no warning); explicit probes= requests never trigger it."""
+    index = _fresh_index(calib_corpus)
+    retriever = Retriever(
+        index, backend="reference", calibrate=True,
+        calibrate_opts={"n_queries": 16, "n_weight_draws": 2,
+                        "probe_grid": (3, 9, 21, 42), "seed": 5},
+    )
+    retriever.search(SearchRequest(like=2, probes=6, k=5))
+    assert index.ladder is None               # probes= plans nothing
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")              # any warning -> failure
+        resp = retriever.search(SearchRequest(like=2, recall_target=0.8, k=5))
+    assert index.ladder is not None
+    assert resp.probes == index.ladder.plan(0.8)
+    assert resp.predicted_recall == pytest.approx(
+        index.ladder.predicted_recall(resp.probes))
+
+
+def test_plan_cache_and_hoisted_shape(calib_corpus):
+    """(T, K) is hoisted at construction and recall_target plans are cached
+    per target — the planner never re-reads index tensors per request."""
+    index = _fresh_index(calib_corpus)
+    retriever = Retriever(index, backend="reference")
+    assert retriever._tk == tuple(int(x) for x in index.counts.shape)
+    with pytest.warns(UserWarning, match="static"):
+        retriever.search(SearchRequest(like=1, recall_target=0.9, k=5))
+    assert 0.9 in retriever._plan_cache
+    # the cache IS consulted: poison it and watch the plan come from there
+    retriever._plan_cache[0.9] = (7, 0.123)
+    resp = retriever.search(SearchRequest(like=2, recall_target=0.9, k=5))
+    assert resp.probes == 7 and resp.predicted_recall == pytest.approx(0.123)
+    # ...and invalidated when a (new) ladder lands on the index
+    calibrate_index(index, n_queries=8, n_weight_draws=2,
+                    probe_grid=(3, 12, 30), seed=2)
+    resp = retriever.search(SearchRequest(like=2, recall_target=0.9, k=5))
+    assert resp.probes == index.ladder.plan(0.9)
+
+
+def test_build_calibrate_flag(calib_corpus):
+    """ClusterPruneIndex.build(calibrate=...) fits the ladder at build."""
+    docs, spec = calib_corpus
+    index = ClusterPruneIndex.build(
+        docs, spec, 40, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0),
+        calibrate={"n_queries": 12, "n_weight_draws": 2,
+                   "probe_grid": (3, 12, 30)},
+    )
+    assert index.ladder is not None
+    assert index.ladder.meta["n_queries"] == 12
+
+
+# ------------------------------------------------------------- serialization
+def test_ladder_roundtrip(tmp_path, calibrated):
+    """to_dict/from_dict and save/load reproduce the ladder exactly."""
+    _, ladder = calibrated
+    clone = ProbeLadder.from_dict(ladder.to_dict())
+    assert clone == ladder
+    path = tmp_path / "ladder.json"
+    ladder.save(path)
+    loaded = ProbeLadder.load(path)
+    assert loaded == ladder
+    assert [loaded.plan(t) for t in TARGETS] == \
+           [ladder.plan(t) for t in TARGETS]
+
+
+def test_index_roundtrip_carries_ladder(tmp_path, calibrated, calib_corpus):
+    """The ladder is serialized WITH the index: a loaded index plans and
+    searches identically without re-paying calibration."""
+    docs, _ = calib_corpus
+    index, ladder = calibrated
+    path = tmp_path / "index.npz"
+    index.save(path)
+    loaded = ClusterPruneIndex.load(path)
+    assert loaded.ladder == ladder
+    assert loaded.spec == index.spec and loaded.method == index.method
+    s1, i1, _ = index.search(docs[3:6], probes=6, k=5)
+    s2, i2, _ = loaded.search(docs[3:6], probes=6, k=5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+    r1 = Retriever(index, backend="reference")
+    r2 = Retriever(loaded, backend="reference")
+    req = SearchRequest(like=5, recall_target=0.9, k=5)
+    assert r1.search(req).probes == r2.search(req).probes
+
+
+def test_ladder_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        ProbeLadder(probes=(9, 3), recall=(0.5, 0.9),
+                    n_clusterings=3, k_clusters=10)
+    with pytest.raises(ValueError, match="isotonic"):
+        ProbeLadder(probes=(3, 9), recall=(0.9, 0.5),
+                    n_clusterings=3, k_clusters=10)
+    lad = ProbeLadder(probes=(3, 9), recall=(0.5, 0.9),
+                      n_clusterings=3, k_clusters=10)
+    with pytest.raises(ValueError, match="recall_target"):
+        lad.plan(0.0)
+
+
+# ------------------------------------------------------ property (hypothesis)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # container has no dev deps
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _ladder_cases(draw):
+        """Random FieldSpec-shaped problem + Dirichlet-derived recall curve."""
+        from repro.core import FieldSpec
+
+        s = draw(st.integers(min_value=1, max_value=5))
+        dims = tuple(draw(st.integers(min_value=1, max_value=64))
+                     for _ in range(s))
+        spec = FieldSpec(names=tuple(f"f{i}" for i in range(s)), dims=dims)
+        t = draw(st.integers(min_value=1, max_value=4))
+        kc = draw(st.integers(min_value=2, max_value=64))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        w = rng.dirichlet(np.ones(spec.s))            # a weight draw, feeding
+        raw = rng.uniform(0, 1, size=5) * (0.5 + 0.5 * w.max())  # the curve
+        grid = tuple(sorted(set(
+            rng.integers(1, t * kc + 1, size=5).tolist()))) or (1,)
+        recall = tuple(np.clip(isotonic_fit(raw[:len(grid)]), 0, 1))
+        targets = sorted(rng.uniform(0.01, 1.0, size=6).tolist())
+        return t, kc, spec, grid, recall, targets
+
+    @settings(max_examples=60, deadline=None)
+    @given(_ladder_cases())
+    def test_planner_bounds_and_monotonicity_property(case):
+        """For random FieldSpecs and Dirichlet weight draws, both planners
+        (static plan_probes and the per-index ladder) output budgets in
+        [1, T*K], monotone in recall_target."""
+        t, kc, spec, grid, recall, targets = case
+        static = [plan_probes(x, t, kc) for x in targets]
+        assert static == sorted(static)
+        assert all(1 <= p <= t * kc for p in static)
+        ladder = ProbeLadder(probes=grid, recall=recall,
+                             n_clusterings=t, k_clusters=kc)
+        planned = [ladder.plan(x) for x in targets]
+        assert planned == sorted(planned)
+        assert all(1 <= p <= t * kc for p in planned)
