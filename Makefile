@@ -1,6 +1,6 @@
-.PHONY: test test-fast serve bench
+.PHONY: test test-fast serve bench bench-preprocess
 
-# Tier-1 verify (ROADMAP.md) + serving-driver smoke
+# Tier-1 verify (ROADMAP.md) + serving/benchmark smokes (incl. add/remove)
 test:
 	./scripts/ci.sh
 
@@ -13,3 +13,8 @@ serve:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+
+# Build-side wall clock only: every registered clusterer through the seam
+# (both FPF backends) + the paper's three Table-1 index builds
+bench-preprocess:
+	PYTHONPATH=src python -m benchmarks.table1_preprocessing --scale quick

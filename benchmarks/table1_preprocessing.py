@@ -1,9 +1,23 @@
-"""Paper Table 1: preprocessing time + index space, three algorithms.
+"""Paper Table 1: preprocessing time + index space, through the clusterer seam.
 
 The paper's claim: FPF-on-sample preprocessing is >= 30x faster than
 CellDec's k-means (they measured 5:28 vs 215:48 wall hours on 54k docs) and
 close to PODS07's random leaders; index space ~4x smaller (one weight-free
 index vs one per weight region).
+
+Two sections:
+
+* **clusterers** — every registered backend of :mod:`repro.core.cluster`
+  timed on ONE clustering of the same corpus (same key), including BOTH FPF
+  paths: the pure-JAX reference and the Pallas ``fpf_iter`` fast path
+  (``fpf_fused``; interpret-mode emulation off-TPU, where the row is the
+  semantics check, not a speed claim).
+* **index builds** — the paper's three end-to-end preprocessing rows: our
+  FPF x3 multi-clustering index vs CellDec's per-region k-means vs PODS07
+  random leaders, wall-clock and index bytes.
+
+``python -m benchmarks.run`` persists the returned dict as
+``BENCH_preprocess.json`` so build-time trajectories accumulate across PRs.
 """
 
 from __future__ import annotations
@@ -14,7 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CellDecIndex, ClusterPruneIndex
+from repro.core import (
+    CellDecIndex, ClusterPruneIndex, available_clusterers, get_clusterer,
+)
 from repro.data import CorpusConfig, make_corpus
 
 from .common import bench_sizes, std_parser
@@ -35,7 +51,22 @@ def run(scale: str = "quick", seed: int = 0):
     docs = jnp.asarray(docs_np)
     k = sz["k_clusters"]
     key = jax.random.PRNGKey(seed)
-    rows = []
+
+    # --- every registered clusterer, ONE clustering each, same key --------
+    print(f"\n# Table 1a — clusterer seam (n={sz['n_docs']}, K={k}, "
+          f"D={spec.total_dim}, platform={jax.default_backend()})")
+    print("clusterer,seconds_per_clustering")
+    clusterer_rows = []
+    for name in available_clusterers():
+        cl = get_clusterer(name)
+        t0 = time.perf_counter()
+        res = cl.cluster(docs, k, key)
+        jax.block_until_ready((res.assign, res.reps))
+        dt = time.perf_counter() - t0
+        clusterer_rows.append((name, dt))
+        note = (" (interpret)" if name == "fpf_fused"
+                and jax.default_backend() != "tpu" else "")
+        print(f"{name},{dt:.2f}{note}")
 
     # --- Our: FPF x3 clusterings (sampled sqrt(Kn) + 1 medoid refinement)
     t0 = time.perf_counter()
@@ -65,19 +96,30 @@ def run(scale: str = "quick", seed: int = 0):
         [x for idx in pods.indexes for x in (idx.leaders, idx.buckets)]
     )
 
-    rows.append(("our-fpf", t_ours, space_ours / 2**20))
-    rows.append(("celldec-kmeans", t_celldec, space_celldec / 2**20))
-    rows.append(("pods07-random", t_pods, space_pods / 2**20))
-
-    print(f"\n# Table 1 — preprocessing (n={sz['n_docs']}, K={k}, "
-          f"D={spec.total_dim})")
+    rows = [
+        ("our-fpf", t_ours, space_ours / 2**20),
+        ("celldec-kmeans", t_celldec, space_celldec / 2**20),
+        ("pods07-random", t_pods, space_pods / 2**20),
+    ]
+    print(f"\n# Table 1b — end-to-end preprocessing (n={sz['n_docs']}, K={k})")
     print("algorithm,build_seconds,index_space_MB")
     for name, t, mb in rows:
         print(f"{name},{t:.2f},{mb:.1f}")
     speedup = t_celldec / max(t_ours, 1e-9)
     print(f"# speedup our vs celldec: {speedup:.1f}x "
           f"(paper: >=30x at 100k docs)")
-    return {"rows": rows, "speedup_vs_celldec": speedup}
+    return {
+        "scale": scale,
+        "n_docs": sz["n_docs"],
+        "k_clusters": k,
+        "platform": jax.default_backend(),
+        "clusterers": {name: dt for name, dt in clusterer_rows},
+        "rows": [
+            {"algorithm": name, "build_seconds": t, "index_space_mb": mb}
+            for name, t, mb in rows
+        ],
+        "speedup_vs_celldec": speedup,
+    }
 
 
 if __name__ == "__main__":

@@ -71,3 +71,18 @@ resp = retriever.search(SearchRequest(like=int(qids[0]), weights=wdicts[0],
                                       k=10, recall_target=0.9))
 print(f"recall_target=0.9 -> planner chose {resp.probes} probes "
       f"(predicted recall {resp.predicted_recall:.2f})")
+
+# 6. the corpus is allowed to change while serving: new documents stream
+#    into the existing buckets (no rebuild), removals tombstone out of
+#    every bucket, and the retriever's caches invalidate themselves. An
+#    exact copy of the query doc must enter at hit #1 — and leave again.
+[copy_id] = retriever.add(docs[int(qids[0])][None, :])
+resp = retriever.search(SearchRequest(like=int(qids[0]), weights=wdicts[0],
+                                      k=10, probes=9))
+print(f"after add: doc {int(copy_id)} (a copy of {int(qids[0])}) is hit #1 "
+      f"-> {resp.hits[0].doc_id == int(copy_id)}")
+retriever.remove([copy_id])
+resp = retriever.search(SearchRequest(like=int(qids[0]), weights=wdicts[0],
+                                      k=10, probes=9))
+print(f"after remove: copy gone from the answer "
+      f"-> {int(copy_id) not in resp.ids}")

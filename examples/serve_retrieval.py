@@ -9,6 +9,12 @@ request fits the per-index recall->probes ladder (sample queries x Dirichlet
 weight draws, probe sweep, isotonic fit) and the responses carry the
 planner's predicted recall, which we check against achieved recall.
 
+The final section serves a MUTATING corpus: repeat requests hit the
+retriever's response cache, new documents are ingested through
+``retriever.add`` (streamed into the padded buckets — no rebuild) and must
+displace the cached answers, then ``retriever.remove`` tombstones them and
+they may never be returned again.
+
     PYTHONPATH=src python examples/serve_retrieval.py             # 20k docs
     PYTHONPATH=src python examples/serve_retrieval.py --docs 2000 # CI smoke
 """
@@ -83,3 +89,42 @@ print(f"[serve_retrieval] recall_target=0.8 half: planner chose "
       f"{planned[0].predicted_recall:.2f}, achieved {achieved:.2f}")
 print(f"[serve_retrieval] batch recall@{K} = {recall:.2f}/{K} "
       f"over {len(requests)} mixed requests")
+
+# --- serve a MUTATING corpus: cache -> add -> invalidate -> remove --------
+mut_qids = qids[: max(4, N_Q // 8)]
+mut_reqs = [
+    SearchRequest(like=int(qid), weights=dict(zip(spec.names, map(float, w))),
+                  probes=12, k=K)
+    for qid, w in zip(mut_qids, wmat)
+]
+first = retriever.search(mut_reqs)
+again = retriever.search(mut_reqs)
+cached = sum(1 for a, b in zip(first, again) if a is b)
+print(f"[serve_retrieval] repeat batch: {cached}/{len(mut_reqs)} responses "
+      f"served from the request cache")
+
+# ingest exact copies of the query docs: each copy is its original's true
+# nearest neighbour, so it must displace the cached answer as hit #1
+new_ids = retriever.add(docs[np.asarray(mut_qids)])
+after_add = retriever.search(mut_reqs)
+hit_first = sum(
+    1 for r, nid in zip(after_add, new_ids)
+    if r.hits and r.hits[0].doc_id == int(nid)
+)
+assert hit_first == len(mut_reqs), (
+    f"only {hit_first}/{len(mut_reqs)} added copies surfaced as hit #1"
+)
+print(f"[serve_retrieval] added {len(new_ids)} docs (no rebuild, "
+      f"{retriever.index.n_live} live): {hit_first}/{len(mut_reqs)} copies "
+      f"took over as hit #1, caches invalidated")
+
+removed = retriever.remove(new_ids)
+after_rm = retriever.search(mut_reqs)
+removed_set = set(map(int, new_ids))
+leaked = sum(
+    1 for r in after_rm
+    if any(h.doc_id in removed_set for h in r.hits)
+)
+assert leaked == 0, f"{leaked} removed docs leaked back into top-k"
+print(f"[serve_retrieval] removed {removed} docs again: none leaked back "
+      f"({retriever.index.n_live} live) — add/remove round-trip OK")

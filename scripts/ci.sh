@@ -4,11 +4,14 @@
 #   scripts/ci.sh --fast    tier-1 unit tests only (the exact command
 #                           ROADMAP.md documents) — the pre-commit loop
 #   scripts/ci.sh           tier-1 tests PLUS smoke runs of the serving
-#                           driver and the heterogeneous-batch example
-#                           (mixed MLT/vector requests, calibrated
-#                           recall_target planning), so API regressions in
-#                           the request->plan->engine->response path fail
-#                           CI, not just unit tests
+#                           driver with a live add/remove round-trip, the
+#                           heterogeneous-batch example with its mutating-
+#                           corpus tail (request cache -> add -> invalidate
+#                           -> remove), and the Table-1 preprocessing
+#                           benchmark through the clusterer seam (both FPF
+#                           backends), so regressions anywhere in the
+#                           build->serve->mutate path fail CI, not just
+#                           unit tests
 #
 # Extra args are forwarded to pytest in both modes.
 set -euo pipefail
@@ -26,10 +29,13 @@ done
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
 
 if [[ "$FAST" == 0 ]]; then
-  echo "[ci] smoke: serving driver through the typed retrieval API"
+  echo "[ci] smoke: serving driver + incremental add/remove round-trip"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m repro.launch.serve --docs 2000 --queries 8
-  echo "[ci] smoke: heterogeneous batch + calibrated recall_target planning"
+    python -m repro.launch.serve --docs 2000 --queries 8 --mutate 4
+  echo "[ci] smoke: heterogeneous batch + calibrated planning + mutating corpus"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python examples/serve_retrieval.py --docs 2000 --queries 32
+  echo "[ci] smoke: Table-1 preprocessing through the clusterer seam"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.table1_preprocessing --scale quick
 fi

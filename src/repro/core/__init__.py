@@ -4,10 +4,9 @@ Layers (top first — the typed API is the public surface):
   api         SearchRequest/SearchResponse + Retriever facade over engines
   fields      multi-field vector-space corpus (concat layout)
   weights     query-side dynamic weight embedding (the paper's §4 theorem)
-  fpf         furthest-point-first k-center clustering (the paper's clusterer)
-  kmeans      Lloyd spherical k-means (CellDec's clusterer)
-  leaders     PODS'07 random-leader clustering
-  index       ClusterPruneIndex — T independent clusterings + pruned search
+  cluster     pluggable Clusterer backends: fpf / fpf_fused / kmeans / random
+  index       ClusterPruneIndex — T independent clusterings + pruned search,
+              incremental add_documents/remove_documents maintenance
   celldec     CellDec weight-region baseline [Singitham et al. VLDB'04]
   metrics     competitive recall, NAG, brute-force ground truth
   engine      pluggable SearchEngine backends: reference / fused / sharded
@@ -24,11 +23,24 @@ from .weights import (
     validate_weights,
     weighted_query,
 )
-from .fpf import ClusteringResult, assign_to_centers, fpf_centers, fpf_cluster
-from .kmeans import kmeans_cluster
-from .leaders import random_leader_cluster
+from .cluster import (
+    CLUSTERERS,
+    Clusterer,
+    ClusteringResult,
+    assign_refine,
+    assign_to_centers,
+    available_clusterers,
+    fpf_centers,
+    fpf_cluster,
+    get_clusterer,
+    kmeans_cluster,
+    pick_clusterer,
+    random_leader_cluster,
+    register_clusterer,
+)
 from .index import (
-    CLUSTERERS, ClusterPruneIndex, pack_buckets, pack_buckets_major,
+    LADDER_DRIFT_THRESHOLD, ClusterPruneIndex, pack_buckets,
+    pack_buckets_major,
 )
 from .engine import (
     BACKENDS,
@@ -67,7 +79,10 @@ __all__ = [
     "validate_weights", "weighted_query",
     "ClusteringResult", "assign_to_centers", "fpf_centers", "fpf_cluster",
     "kmeans_cluster", "random_leader_cluster",
-    "CLUSTERERS", "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
+    "CLUSTERERS", "Clusterer", "assign_refine", "available_clusterers",
+    "get_clusterer", "pick_clusterer", "register_clusterer",
+    "ClusterPruneIndex", "LADDER_DRIFT_THRESHOLD", "pack_buckets",
+    "pack_buckets_major",
     "BACKENDS", "SearchEngine", "available_backends", "get_engine",
     "pick_backend", "register_backend", "split_probes", "sweep_probes",
     "ProbeLadder", "calibrate_index", "isotonic_fit",

@@ -31,11 +31,21 @@ wrong one for users. This module is the seam between the two:
     queries, validates weights, plans probes, **batches heterogeneous
     requests** that share an execution shape ``(backend, probes, k)`` into
     one engine call each, and decomposes scores on the way out.
+    ``retriever.add(docs)`` / ``retriever.remove(ids)`` mutate the index
+    in place (incremental bucket maintenance, no rebuild) and invalidate
+    every retriever-level cache.
+
+    The facade memoises two things for the serving hot path: the resolved
+    ``(like, weights)`` -> weighted-query reduction (the §4 fold repeats
+    per user across sessions), and complete responses for byte-identical
+    repeat requests. Both caches key off ``index.version``, so a mutation
+    — through this facade or directly on the index — flushes them; a
+    ladder refit flushes the response cache too (planned budgets change).
 
 The raw tuple surface survives only inside :mod:`repro.core.engine`; every
 consumer above it (serving driver, examples, benchmarks) speaks requests and
-responses. Future caching, batching and async serving extend this layer —
-an engine never needs to know.
+responses. Future batching and async serving extend this layer — an engine
+never needs to know.
 """
 
 from __future__ import annotations
@@ -318,6 +328,12 @@ class Retriever:
     order.
     """
 
+    # Cache bounds: FIFO-evicted OrderedDicts. qw rows are (D,) floats
+    # (~4 KB at D=1024), responses are a few KB of hits — both caps keep
+    # the caches at tens of MB worst case.
+    _QW_CACHE_MAX = 8192
+    _RESPONSE_CACHE_MAX = 2048
+
     def __init__(self, index: ClusterPruneIndex, *, backend: str = "auto",
                  default_probes: int = 12, calibrate: bool = False,
                  calibrate_opts: Mapping | None = None):
@@ -329,8 +345,9 @@ class Retriever:
         )
         self.default_probes = default_probes
         # ``calibrate=True``: an index without a fitted ladder gets one
-        # lazily, on the first recall_target= request (paid once); False
-        # falls back to the static plan_probes ladder with a warning.
+        # lazily, on the first recall_target= request (paid once) — and a
+        # ladder gone stale from corpus churn gets REFIT the same way;
+        # False falls back to the static plan_probes ladder with a warning.
         self.calibrate = calibrate
         self.calibrate_opts = dict(calibrate_opts or {})
         # planning state, hoisted once: (T, K) never changes for a built
@@ -342,6 +359,17 @@ class Retriever:
         self._plan_cache: dict[float, tuple[int, float]] = {}
         self._plan_ladder: object | None = index.ladder
         self._warned_static = False
+        self._warned_stale = False
+        # request memoisation (ROADMAP "batch caching"): resolved
+        # (like, weights)->qw reductions and whole repeat-request responses,
+        # valid for exactly one index version.
+        from collections import OrderedDict
+
+        self._qw_cache: "OrderedDict[tuple, jnp.ndarray]" = OrderedDict()
+        self._response_cache: "OrderedDict[tuple, SearchResponse]" = (
+            OrderedDict()
+        )
+        self._cache_version = getattr(index, "version", 0)
 
     @classmethod
     def build(
@@ -352,6 +380,8 @@ class Retriever:
         *,
         backend: str = "auto",
         default_probes: int = 12,
+        calibrate: bool | Mapping = False,
+        calibrate_opts: Mapping | None = None,
         **build_kwargs,
     ) -> "Retriever":
         """Build the weight-free index and wrap it (one-stop constructor).
@@ -359,14 +389,115 @@ class Retriever:
         Pass ``calibrate=True`` (or a dict of
         :func:`~repro.core.calibrate.calibrate_index` options) to fit the
         per-index recall->probes ladder at build time; the retriever then
-        serves honest ``recall_target=`` requests from the first one.
+        serves honest ``recall_target=`` requests from the first one. The
+        same flag also arms the retriever's RE-calibration policy: when
+        corpus churn (``add``/``remove``) drives the ladder stale, the next
+        ``recall_target=`` request refits it with the same options.
+        ``calibrate_opts`` merge over (and win against) options given via a
+        ``calibrate`` dict; passing ``calibrate_opts`` without opting in
+        via ``calibrate`` is an error, not a silent no-op.
         """
-        index = ClusterPruneIndex.build(docs, spec, k_clusters, **build_kwargs)
-        return cls(index, backend=backend, default_probes=default_probes)
+        # Normalise the two knobs ONCE into (opted_in, opts); index.build
+        # owns the bool-or-Mapping opt-in rule for direct callers, this
+        # entry point only merges its own pair before delegating.
+        opted_in = bool(calibrate) or isinstance(calibrate, Mapping)
+        opts: dict = dict(calibrate) if isinstance(calibrate, Mapping) else {}
+        if calibrate_opts:
+            if not opted_in:
+                raise ValueError(
+                    "calibrate_opts= was given but calibrate= is off; pass "
+                    "calibrate=True (or a dict of options) to opt in"
+                )
+            opts.update(calibrate_opts)
+        index = ClusterPruneIndex.build(
+            docs, spec, k_clusters,
+            calibrate=(opts or True) if opted_in else False,
+            **build_kwargs,
+        )
+        return cls(index, backend=backend, default_probes=default_probes,
+                   calibrate=opted_in, calibrate_opts=opts)
 
     @property
     def spec(self) -> FieldSpec:
         return self.index.spec
+
+    # ------------------------------------------------------------- mutation
+    def add(self, new_docs) -> np.ndarray:
+        """Ingest documents into the served index (no rebuild); returns the
+        new doc ids. Streams through
+        :meth:`~repro.core.index.ClusterPruneIndex.add_documents` and
+        flushes every retriever-level cache — the next request sees the
+        mutated corpus."""
+        ids = self.index.add_documents(new_docs)
+        self._flush_request_caches()
+        return ids
+
+    def remove(self, doc_ids) -> int:
+        """Tombstone documents out of the served index; returns how many
+        were newly removed. The ids can never appear in a hit again."""
+        n = self.index.remove_documents(doc_ids)
+        self._flush_request_caches()
+        return n
+
+    # long-form aliases matching the index methods
+    add_documents = add
+    remove_documents = remove
+
+    def _flush_request_caches(self) -> None:
+        self._qw_cache.clear()
+        self._response_cache.clear()
+        self._plan_cache.clear()
+        self._cache_version = getattr(self.index, "version", 0)
+
+    def _sync_version(self) -> None:
+        """Catch mutations applied to the index directly (not through this
+        facade): the index bumps ``version`` on every mutation, and stale
+        cached responses must never survive one."""
+        if getattr(self.index, "version", 0) != self._cache_version:
+            self._flush_request_caches()
+        if self.index.ladder is not self._plan_ladder:
+            # ladder swapped outside _plan_target (direct calibrate_index):
+            # planned budgets / predicted recall may differ.
+            self._plan_cache.clear()
+            self._response_cache.clear()
+            self._plan_ladder = self.index.ladder
+
+    # request cache keys -----------------------------------------------------
+    @staticmethod
+    def _weights_key(weights):
+        """Hashable canonical form of a request's weights (None = default)."""
+        if weights is None:
+            return None
+        if isinstance(weights, Mapping):
+            return tuple(sorted((str(k), float(v)) for k, v in weights.items()))
+        return tuple(float(v) for v in np.asarray(weights).reshape(-1))
+
+    def _request_key(self, req: SearchRequest) -> tuple | None:
+        """Full identity of a more-like-this request, or None when the
+        request is not cacheable (raw query vectors are not memoised — the
+        corpus-resident ``like=`` form is the serving hot path)."""
+        if req.like is None:
+            return None
+        # key on the RESOLVED budget source: a default-probes request must
+        # not survive a default_probes change as a stale cached answer
+        probes = req.probes
+        if probes is None and req.recall_target is None:
+            probes = self.default_probes
+        return (
+            int(req.like),
+            self._weights_key(req.weights),
+            req.k,
+            probes,
+            req.recall_target,
+            req.exclude,
+            req.backend or self.backend,
+        )
+
+    @staticmethod
+    def _cache_put(cache, cap, key, value) -> None:
+        cache[key] = value
+        while len(cache) > cap:
+            cache.popitem(last=False)
 
     # ------------------------------------------------------------- planning
     def _plan(self, req: SearchRequest) -> tuple[str, int, float | None]:
@@ -396,18 +527,34 @@ class Retriever:
 
         Consults the index's calibrated :class:`ProbeLadder`; with
         ``calibrate=True`` a missing ladder is fitted lazily (once) on this
-        first request. Otherwise falls back to the static
-        :func:`plan_probes` ladder with a warning — the static rungs were
-        fit on ONE synthetic corpus and weight setting, so the target is
-        nominal there, not measured.
+        first request — and a ladder the index reports STALE (corpus churn
+        past the drift threshold since it was fit) is re-fitted the same
+        way. Without ``calibrate=True`` a stale ladder still plans, with a
+        one-time warning: measured-but-outdated beats the static fallback.
+        A missing ladder falls back to the static :func:`plan_probes`
+        ladder with a warning — the static rungs were fit on ONE synthetic
+        corpus and weight setting, so the target is nominal there, not
+        measured.
         """
         ladder = self.index.ladder
-        if ladder is None and self.calibrate:
+        stale = getattr(self.index, "ladder_stale", False)
+        if (ladder is None or stale) and self.calibrate:
             from .calibrate import calibrate_index
 
             ladder = calibrate_index(self.index, **self.calibrate_opts)
+        elif stale and not self._warned_stale:
+            warnings.warn(
+                "the index's calibrated probe ladder is stale (corpus churn "
+                "since calibration exceeds the drift threshold); "
+                "recall_target planning still uses it, but re-run "
+                "repro.core.calibrate.calibrate_index(index) — or construct "
+                "the Retriever with calibrate=True to refit automatically.",
+                stacklevel=3,
+            )
+            self._warned_stale = True
         if ladder is not self._plan_ladder:       # fitted/replaced: re-plan
             self._plan_cache.clear()
+            self._response_cache.clear()          # planned budgets changed
             self._plan_ladder = ladder
         cached = self._plan_cache.get(target)
         if cached is not None:
@@ -447,35 +594,72 @@ class Retriever:
 
         if not reqs:
             return []
+        self._sync_version()
         index, spec = self.index, self.spec
 
-        # Resolve every request up front (vectorised where it matters):
-        # queries come from the corpus (like=) or the request (query=) —
-        # an all-MLT batch (the serving hot path) is ONE corpus gather —
-        # and weights fold in via the §4 reduction in ONE call.
-        if all(r.like is not None for r in reqs):
-            bad = [r.like for r in reqs if int(r.like) >= index.n_docs]
-            if bad:
-                raise ValueError(
-                    f"like={bad[0]} out of range for a corpus of "
-                    f"{index.n_docs} documents"
-                )
-            q_all = index.docs[jnp.asarray([int(r.like) for r in reqs])]
-        else:
-            q_all = jnp.stack([r.resolve_query(index) for r in reqs])
-        w_rows = np.stack([r.resolve_weights(spec) for r in reqs])
-        qw_all = weighted_query(q_all, jnp.asarray(w_rows), spec)  # (N, D)
+        # Whole-response memoisation: a byte-identical repeat of a cacheable
+        # (more-like-this) request is answered without touching the engine.
+        # Cached responses keep their original latency/batch stats — they
+        # describe the engine call that produced the answer.
+        keys = [self._request_key(r) for r in reqs]
+        out: list[SearchResponse | None] = [
+            self._response_cache.get(key) if key is not None else None
+            for key in keys
+        ]
+        miss = [i for i, resp in enumerate(out) if resp is None]
+        if not miss:
+            return out  # type: ignore[return-value]
+        mreqs = [reqs[i] for i in miss]
+
+        # Resolve the misses up front (vectorised where it matters): the
+        # (like, weights) -> qw §4 reduction is memoised per pair — repeat
+        # users cost one cache probe — and the remainder resolve in ONE
+        # corpus gather (all-MLT fast path) + ONE weighted_query call.
+        qkeys = [
+            (int(r.like), self._weights_key(r.weights))
+            if r.like is not None else None
+            for r in mreqs
+        ]
+        rows_qw: list[jnp.ndarray | None] = [
+            self._qw_cache.get(qk) if qk is not None else None for qk in qkeys
+        ]
+        todo = [j for j, row in enumerate(rows_qw) if row is None]
+        if todo:
+            treqs = [mreqs[j] for j in todo]
+            if all(r.like is not None for r in treqs):
+                bad = [r.like for r in treqs if int(r.like) >= index.n_docs]
+                if bad:
+                    raise ValueError(
+                        f"like={bad[0]} out of range for a corpus of "
+                        f"{index.n_docs} documents"
+                    )
+                q_all = index.docs[jnp.asarray([int(r.like) for r in treqs])]
+            else:
+                q_all = jnp.stack([r.resolve_query(index) for r in treqs])
+            w_rows = np.stack([r.resolve_weights(spec) for r in treqs])
+            qw_new = weighted_query(q_all, jnp.asarray(w_rows), spec)
+            for jj, j in enumerate(todo):
+                rows_qw[j] = qw_new[jj]
+                if qkeys[j] is not None:
+                    self._cache_put(
+                        self._qw_cache, self._QW_CACHE_MAX, qkeys[j],
+                        qw_new[jj],
+                    )
+        # cold batch (no qw-cache hits): qw_new already IS the batch tensor
+        qw_all = (
+            qw_new if todo and len(todo) == len(mreqs)
+            else jnp.stack(rows_qw)
+        )                                                 # (n_miss, D)
         excl_all = np.asarray(
-            [r.resolve_exclude() for r in reqs], np.int32
+            [r.resolve_exclude() for r in mreqs], np.int32
         )
-        plans = [self._plan(r) for r in reqs]
+        plans = [self._plan(r) for r in mreqs]
 
         # Group by execution shape; each group is one engine call.
         groups: dict[tuple[str, int, int], list[int]] = {}
-        for i, (r, (backend, probes, _)) in enumerate(zip(reqs, plans)):
-            groups.setdefault((backend, probes, r.k), []).append(i)
+        for j, (r, (backend, probes, _)) in enumerate(zip(mreqs, plans)):
+            groups.setdefault((backend, probes, r.k), []).append(j)
 
-        out: list[SearchResponse | None] = [None] * len(reqs)
         for (backend, probes, k), rows in groups.items():
             engine = get_engine(index, backend)
             qw = qw_all[jnp.asarray(rows)]
@@ -491,28 +675,40 @@ class Retriever:
             ids_np = np.asarray(ids, np.int32)
             n_np = np.asarray(n_scored, np.int32)
             fields_np = np.asarray(fields, np.float32)
-            for j, i in enumerate(rows):
+            for jj, j in enumerate(rows):
                 hits = tuple(
                     Hit(
-                        doc_id=int(ids_np[j, c]),
-                        score=float(scores_np[j, c]),
+                        doc_id=int(ids_np[jj, c]),
+                        score=float(scores_np[jj, c]),
                         field_scores={
-                            name: float(fields_np[j, c, f])
+                            name: float(fields_np[jj, c, f])
                             for f, name in enumerate(spec.names)
                         },
                     )
                     for c in range(k)
-                    if ids_np[j, c] >= 0
+                    if ids_np[jj, c] >= 0
                 )
-                out[i] = SearchResponse(
+                resp = SearchResponse(
                     hits=hits,
-                    doc_ids=ids_np[j],
-                    scores=scores_np[j],
-                    n_scored=int(n_np[j]),
+                    doc_ids=ids_np[jj],
+                    scores=scores_np[jj],
+                    n_scored=int(n_np[jj]),
                     latency_s=dt,
                     backend=engine.name,
                     probes=probes,
                     batch_size=len(rows),
-                    predicted_recall=plans[i][2],
+                    predicted_recall=plans[j][2],
                 )
+                i = miss[j]
+                out[i] = resp
+                if keys[i] is not None:
+                    # the cached object is shared with every future repeat
+                    # caller: freeze its array views so an in-place edit by
+                    # one consumer cannot poison later cache hits
+                    resp.doc_ids.flags.writeable = False
+                    resp.scores.flags.writeable = False
+                    self._cache_put(
+                        self._response_cache, self._RESPONSE_CACHE_MAX,
+                        keys[i], resp,
+                    )
         return out  # type: ignore[return-value]

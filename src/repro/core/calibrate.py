@@ -203,7 +203,13 @@ def calibrate_index(
     gives the same curve.
 
     ``store=True`` (default) attaches the ladder to ``index.ladder``, where
-    ``Retriever._plan`` and ``ClusterPruneIndex.save`` pick it up.
+    ``Retriever._plan`` and ``ClusterPruneIndex.save`` pick it up, and
+    resets the index's mutation-drift counter — a freshly fitted ladder is
+    by definition not stale (see ``ClusterPruneIndex.ladder_stale``).
+    On a mutated index, queries are sampled from LIVE documents only and
+    tombstoned documents are masked out of the ground truth (they are
+    unreachable through the buckets, so counting them as misses would bias
+    the fitted curve down).
     """
     from .engine import sweep_probes
     from .metrics import brute_force_topk, recall_fraction
@@ -219,9 +225,14 @@ def calibrate_index(
         raise ValueError("probe_grid must be non-empty")
 
     rng = np.random.default_rng(seed)
-    n = index.n_docs
-    nq = min(n_queries, n)
-    qids = rng.choice(n, nq, replace=False)
+    removed = getattr(index, "removed", None)
+    live = (
+        np.flatnonzero(~removed) if removed is not None
+        else np.arange(index.n_docs)
+    )
+    mask = jnp.asarray(~removed) if removed is not None else None
+    nq = min(n_queries, live.size)
+    qids = rng.choice(live, nq, replace=False)
     # Weight draws must cover the simplex CORNERS, not just its middle:
     # skewed weights (one dominant field) are the hard cases — the query
     # collapses toward one subspace while the clustering was built on the
@@ -241,7 +252,7 @@ def calibrate_index(
     qw = weighted_query(q_all, w_all, spec)
     exclude = jnp.asarray(np.tile(qids, n_weight_draws), jnp.int32)
 
-    _, gt_ids = brute_force_topk(docs, qw, k, exclude=exclude)
+    _, gt_ids = brute_force_topk(docs, qw, k, exclude=exclude, mask=mask)
 
     sweep = sweep_probes(
         index, qw, probe_grid=grid, k=k, exclude=exclude, backend=backend
@@ -267,4 +278,5 @@ def calibrate_index(
     )
     if store:
         index.ladder = ladder
+        index.n_mutations = 0     # fresh fit == zero drift by definition
     return ladder

@@ -1,10 +1,12 @@
 """Multi-clustering cluster-prune index — the paper's search structure.
 
 Build: ``T`` (default 3) *independent* clusterings of the weight-free
-concatenated corpus (FPF by default). Search: embed the user weights into the
-query (:func:`repro.core.weights.weighted_query`), probe the ``b/T`` clusters
-with the most similar representatives in *each* clustering, exhaustively score
-the union of their buckets, return the top-k.
+concatenated corpus, produced by a registered clusterer
+(:mod:`repro.core.cluster` — ``method="auto"`` picks the fused Pallas FPF
+path on TPU, the pure-JAX FPF reference elsewhere). Search: embed the user
+weights into the query (:func:`repro.core.weights.weighted_query`), probe
+the ``b/T`` clusters with the most similar representatives in *each*
+clustering, exhaustively score the union of their buckets, return the top-k.
 
 This module owns the *data structure only*: the padded ``(T, K, B)`` bucket-id
 tensor (sentinel = ``n``), the per-clustering assignment vectors, and — new
@@ -17,6 +19,17 @@ may additionally carry a fitted :class:`~repro.core.calibrate.ProbeLadder`
 on *this* index; it round-trips through :meth:`ClusterPruneIndex.save` /
 :meth:`ClusterPruneIndex.load`.
 
+The index is no longer frozen at build time: :meth:`add_documents` streams
+new documents through the same :func:`~repro.core.cluster.assign_to_centers`
+primitive the build tail uses and inserts them into the padded buckets
+(growing ``B`` when a bucket overflows); :meth:`remove_documents` tombstones
+documents out of every bucket. Mutations bump ``version`` (cache coherence
+for retriever-level memoisation), accumulate into ``n_mutations`` (the
+calibrated ladder is reported stale once drift crosses
+:data:`LADDER_DRIFT_THRESHOLD`), and invalidate the bucket-major tensor and
+cached engines — the bucket-major layout is re-packed *lazily* on the next
+fused search, so a burst of adds pays the layout conversion once.
+
 Search *execution* lives in :mod:`repro.core.engine`: three interchangeable
 backends (``reference`` pure-JAX gather, ``fused`` Pallas ``bucket_score``,
 ``sharded`` ``shard_map``) share identical probe/dedup/exclude/cost
@@ -27,27 +40,25 @@ backward compatibility — pass ``backend=`` to pick a path explicitly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fields import FieldSpec
-from .fpf import ClusteringResult, fpf_cluster
-from .kmeans import kmeans_cluster
-from .leaders import random_leader_cluster
+from .cluster import assign_to_centers, get_clusterer
+from .fields import FieldSpec, normalize_fields
 from .weights import weighted_query
 
 __all__ = [
-    "ClusterPruneIndex", "pack_buckets", "pack_buckets_major", "CLUSTERERS",
+    "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
+    "LADDER_DRIFT_THRESHOLD",
 ]
 
-CLUSTERERS: dict[str, Callable[..., ClusteringResult]] = {
-    "fpf": fpf_cluster,
-    "kmeans": kmeans_cluster,
-    "random": random_leader_cluster,
-}
+# Fraction of the corpus that may churn (adds + removes) before a calibrated
+# ProbeLadder is reported stale: the recall-vs-probes curve was measured on
+# the pre-mutation clustering, and past this drift the promise is no longer
+# trustworthy (Retriever re-calibrates or warns — see api._plan_target).
+LADDER_DRIFT_THRESHOLD = 0.1
 
 # Auto-materialise the bucket-major tensor at build (TPU only, where the
 # fused backend serves by default) when it costs less than this; otherwise
@@ -62,17 +73,22 @@ def pack_buckets(
 
     Padding uses the sentinel id ``n`` (one past the last valid doc). ``B`` is
     the max bucket size rounded up to a multiple of 8 (TPU sublane friendly).
+    Entries with ``assign < 0`` (tombstoned documents) are skipped.
     """
-    counts = np.bincount(assign, minlength=k).astype(np.int32)
-    b = int(counts.max()) if bucket_pad is None else bucket_pad
+    assign = np.asarray(assign)
+    valid_idx = np.flatnonzero(assign >= 0)
+    a = assign[valid_idx]
+    counts = np.bincount(a, minlength=k).astype(np.int32)
+    b = (int(counts.max()) if counts.size else 1) if bucket_pad is None \
+        else bucket_pad
     b = max(8, -(-b // 8) * 8)
     ids = np.full((k, b), n, dtype=np.int32)
-    order = np.argsort(assign, kind="stable")
+    order = valid_idx[np.argsort(a, kind="stable")]
     sorted_assign = assign[order]
     # position of each doc inside its bucket
     start = np.zeros(k + 1, dtype=np.int64)
     np.cumsum(counts, out=start[1:])
-    pos = np.arange(len(assign)) - start[sorted_assign]
+    pos = np.arange(len(order)) - start[sorted_assign]
     ids[sorted_assign, pos] = order
     return ids, counts
 
@@ -103,11 +119,14 @@ class ClusterPruneIndex:
     docs: jnp.ndarray       # (n, D) per-field unit-normalised corpus
     leaders: jnp.ndarray    # (T, K, D)
     buckets: jnp.ndarray    # (T, K, B) int32, sentinel = n
-    counts: jnp.ndarray     # (T, K) int32
+    counts: jnp.ndarray     # (T, K) int32 LIVE members per bucket
     method: str = "fpf"
-    assign: np.ndarray | None = None        # (T, n) cluster of each doc
+    assign: np.ndarray | None = None        # (T, n) cluster of each doc (-1 = removed)
     bucket_data: jnp.ndarray | None = None  # (T, K, B, D) bucket-major corpus
     ladder: object | None = None            # fitted ProbeLadder (or None)
+    removed: np.ndarray | None = None       # (n,) bool tombstones (or None)
+    version: int = 0                        # bumped on every mutation
+    n_mutations: int = 0                    # docs churned since last calibration
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -118,7 +137,7 @@ class ClusterPruneIndex:
         k_clusters: int,
         *,
         n_clusterings: int = 3,
-        method: str = "fpf",
+        method: str = "auto",
         key: jax.Array | None = None,
         pack_major: bool | None = None,
         calibrate: bool | dict = False,
@@ -126,6 +145,15 @@ class ClusterPruneIndex:
     ) -> "ClusterPruneIndex":
         """Cluster T ways, pack buckets, and materialise the bucket-major
         tensor for the fused backend where that backend will actually serve.
+
+        ``method`` names a registered clusterer
+        (:func:`repro.core.cluster.available_clusterers`); the default
+        ``"auto"`` resolves to ``fpf_fused`` (the Pallas kernel path) on TPU
+        and the pure-JAX ``fpf`` reference elsewhere — the two produce
+        identical clusterings at a fixed seed, so the stored ``method``
+        records the resolved name only for provenance.
+        ``clusterer_kwargs`` pass through to the clusterer's constructor
+        (e.g. ``iters=`` for ``kmeans``).
 
         ``pack_major``: True forces the (T, K, B, D) tensor now, False defers
         it to the first fused search, None (default) materialises it only on
@@ -143,10 +171,10 @@ class ClusterPruneIndex:
         if key is None:
             key = jax.random.PRNGKey(0)
         n = docs.shape[0]
-        clusterer = CLUSTERERS[method]
+        clusterer = get_clusterer(method, **clusterer_kwargs)
         reps_l, ids_l, counts_l, assign_l = [], [], [], []
         for t, sub in enumerate(jax.random.split(key, n_clusterings)):
-            res = clusterer(docs, k_clusters, sub, **clusterer_kwargs)
+            res = clusterer.cluster(docs, k_clusters, sub)
             reps_l.append(res.reps)
             assign = np.asarray(res.assign)
             assign_l.append(assign)
@@ -171,28 +199,53 @@ class ClusterPruneIndex:
             leaders=jnp.stack(reps_l),
             buckets=buckets,
             counts=jnp.asarray(np.stack(counts_l)),
-            method=method,
+            method=clusterer.name,
             assign=np.stack(assign_l).astype(np.int64),
             bucket_data=(
                 pack_buckets_major(docs, buckets, n) if pack_major else None
             ),
         )
-        if calibrate:
+        from collections.abc import Mapping
+
+        # any Mapping (even empty = "calibrate with defaults") is an opt-in
+        if calibrate or isinstance(calibrate, Mapping):
             from .calibrate import calibrate_index
 
             calibrate_index(
-                index, **(calibrate if isinstance(calibrate, dict) else {})
+                index,
+                **(dict(calibrate) if isinstance(calibrate, Mapping) else {}),
             )
         return index
 
     # ------------------------------------------------------------- structure
     @property
     def n_docs(self) -> int:
+        """Corpus rows (tombstoned documents included — ids are stable)."""
         return self.docs.shape[0]
 
+    @property
+    def n_live(self) -> int:
+        """Documents actually reachable through the buckets."""
+        gone = 0 if self.removed is None else int(self.removed.sum())
+        return self.n_docs - gone
+
+    @property
+    def ladder_stale(self) -> bool:
+        """True when the calibrated ladder predates too much corpus churn.
+
+        The recall-vs-probes curve was measured on the clustering as it
+        stood at calibration time; once adds + removes exceed
+        :data:`LADDER_DRIFT_THRESHOLD` of the corpus, ``recall_target=``
+        promises planned from it are no longer measured-on-this-index.
+        ``calibrate_index`` resets the drift counter when it refits.
+        """
+        if self.ladder is None:
+            return False
+        return self.n_mutations > LADDER_DRIFT_THRESHOLD * max(1, self.n_live)
+
     def assignments(self) -> np.ndarray:
-        """(T, n) cluster assignment per doc (derived from buckets if the
-        index predates the ``assign`` field)."""
+        """(T, n) cluster assignment per doc, -1 for removed docs (derived
+        from buckets if the index predates the ``assign`` field)."""
         if self.assign is not None:
             return self.assign
         t, k_clusters, _ = self.buckets.shape
@@ -203,6 +256,140 @@ class ClusterPruneIndex:
                 row = bk[ti, c]
                 out[ti, row[row < self.n_docs]] = c
         return out
+
+    # ---------------------------------------------------------- maintenance
+    def _invalidate(self) -> None:
+        """After a mutation: drop every derived/cached view and bump the
+        version. The bucket-major tensor is re-packed LAZILY (next fused
+        search), cached engines re-materialise on next ``get_engine`` —
+        retriever-level caches key off ``version``."""
+        self.bucket_data = None
+        self.__dict__.pop("_bucket_major_flat", None)
+        self.__dict__.pop("_engines", None)
+        self.version += 1
+
+    def add_documents(
+        self, new_docs: jnp.ndarray, *, chunk: int = 16384
+    ) -> np.ndarray:
+        """Ingest documents WITHOUT a rebuild; returns their new doc ids.
+
+        Each new document is streamed through the same
+        :func:`~repro.core.cluster.assign_to_centers` primitive the build
+        tail uses (against every clustering's leaders) and inserted into a
+        free padded slot of its bucket; ``B`` grows (to the next sublane
+        multiple of 8) only when a bucket overflows. Leaders are NOT moved —
+        that is the paper's serve-time contract (representatives drift is
+        what the :attr:`ladder_stale` threshold prices in).
+
+        ``new_docs`` rows are per-field unit-normalised on ingestion (a
+        no-op for vectors that already follow the corpus convention).
+        """
+        new_docs = jnp.atleast_2d(jnp.asarray(new_docs))
+        if new_docs.shape[-1] != self.spec.total_dim:
+            raise ValueError(
+                f"new docs have dim {new_docs.shape[-1]}, corpus concat dim "
+                f"is {self.spec.total_dim}"
+            )
+        m = int(new_docs.shape[0])
+        if m == 0:
+            return np.empty((0,), np.int64)
+        new_docs = normalize_fields(new_docs, self.spec)
+        n_old = self.n_docs
+        n_new = n_old + m
+        t, k_clusters, b = self.buckets.shape
+
+        # Stream through the shared assignment primitive, one clustering at
+        # a time (leaders are (K, D) rows of the (T, K, D) tensor).
+        new_assign = np.stack([
+            np.asarray(
+                assign_to_centers(new_docs, self.leaders[ti], chunk=chunk)[0]
+            )
+            for ti in range(t)
+        ]).astype(np.int64)                               # (T, m)
+
+        all_assign = self.assignments()                   # (T, n_old), pre-add
+        counts = np.asarray(self.counts).copy()
+        add_counts = np.zeros_like(counts)
+        for ti in range(t):
+            np.add.at(add_counts[ti], new_assign[ti], 1)
+
+        # Grow B only on overflow; invalid slots always hold the CURRENT
+        # sentinel (== n_docs), so valid entries are exactly ``< n_old``.
+        need = int((counts + add_counts).max())
+        new_b = b if need <= b else max(8, -(-need // 8) * 8)
+        bk = np.asarray(self.buckets)
+        out = np.full((t, k_clusters, new_b), n_new, np.int32)
+        live = bk < n_old
+        out[:, :, :b][live] = bk[live]
+
+        ids_new = np.arange(n_old, n_new, dtype=np.int64)
+        for ti in range(t):
+            a = new_assign[ti]
+            for c in np.unique(a):
+                docs_c = ids_new[a == c].astype(np.int32)
+                row = out[ti, c]
+                free = np.flatnonzero(row == n_new)[: len(docs_c)]
+                row[free] = docs_c
+        counts += add_counts
+
+        self.docs = jnp.concatenate([self.docs, new_docs])
+        self.buckets = jnp.asarray(out)
+        self.counts = jnp.asarray(counts)
+        self.assign = np.concatenate([all_assign, new_assign], axis=1)
+        if self.removed is not None:
+            self.removed = np.concatenate(
+                [self.removed, np.zeros((m,), bool)]
+            )
+        self.n_mutations += m
+        self._invalidate()
+        return ids_new
+
+    def remove_documents(self, doc_ids) -> int:
+        """Tombstone documents out of every bucket; returns how many were
+        newly removed (already-removed ids are ignored).
+
+        Doc ids are STABLE handles: the corpus rows stay in place (so
+        ``like=`` resolution and score decomposition keep working for the
+        survivors) but the removed ids leave every bucket — no backend can
+        ever score or return them. Their padded slots become free capacity
+        for later :meth:`add_documents` calls.
+        """
+        ids = np.unique(np.asarray(doc_ids, np.int64).reshape(-1))
+        if ids.size == 0:
+            return 0
+        n = self.n_docs
+        if ids[0] < 0 or ids[-1] >= n:
+            raise ValueError(
+                f"doc ids must be in [0, {n}), got range "
+                f"[{ids[0]}, {ids[-1]}]"
+            )
+        removed = (
+            self.removed.copy() if self.removed is not None
+            else np.zeros((n,), bool)
+        )
+        fresh = ids[~removed[ids]]
+        if fresh.size == 0:
+            return 0
+
+        all_assign = self.assignments().copy()            # (T, n)
+        t = all_assign.shape[0]
+        bk = np.asarray(self.buckets).copy()
+        bk[np.isin(bk, fresh)] = n                        # back to sentinel
+        counts = np.asarray(self.counts).copy()
+        for ti in range(t):
+            a = all_assign[ti, fresh]
+            a = a[a >= 0]
+            np.subtract.at(counts[ti], a, 1)
+        all_assign[:, fresh] = -1
+        removed[fresh] = True
+
+        self.buckets = jnp.asarray(bk)
+        self.counts = jnp.asarray(counts)
+        self.assign = all_assign
+        self.removed = removed
+        self.n_mutations += int(fresh.size)
+        self._invalidate()
+        return int(fresh.size)
 
     def ensure_bucket_major(self) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-major view for the fused backend: ``((T*K, B, D) data,
@@ -226,11 +413,12 @@ class ClusterPruneIndex:
 
     # ------------------------------------------------------------ persistence
     def save(self, path) -> None:
-        """Serialize the index — including its calibrated ladder — to one
-        ``.npz``. The bucket-major tensor is NOT stored (it is a pure layout
-        transform, re-derived lazily on load); the ladder IS, so a loaded
-        index keeps its honest ``recall_target=`` planning without re-paying
-        the calibration sweep."""
+        """Serialize the index — calibrated ladder and mutation state
+        (tombstones, ladder-drift counter) included — to one ``.npz``. The
+        bucket-major tensor is NOT stored (it is a pure layout transform,
+        re-derived lazily on load); the ladder IS, so a loaded index keeps
+        its honest ``recall_target=`` planning without re-paying the
+        calibration sweep — and keeps knowing when that ladder went stale."""
         import json
 
         np.savez_compressed(
@@ -250,11 +438,16 @@ class ClusterPruneIndex:
                 "" if self.ladder is None
                 else json.dumps(self.ladder.to_dict())
             ),
+            removed=(
+                self.removed if self.removed is not None
+                else np.zeros((0,), bool)
+            ),
+            n_mutations=np.int64(self.n_mutations),
         )
 
     @classmethod
     def load(cls, path) -> "ClusterPruneIndex":
-        """Inverse of :meth:`save` (ladder included)."""
+        """Inverse of :meth:`save` (ladder + mutation state included)."""
         import json
 
         from .calibrate import ProbeLadder
@@ -263,6 +456,7 @@ class ClusterPruneIndex:
         z = np.load(path, allow_pickle=False)
         assign = z["assign"]
         ladder_json = str(z["ladder"])
+        removed = z["removed"] if "removed" in z.files else np.zeros(0, bool)
         return cls(
             spec=FieldSpec(
                 names=tuple(str(n) for n in z["names"]),
@@ -277,6 +471,10 @@ class ClusterPruneIndex:
             ladder=(
                 ProbeLadder.from_dict(json.loads(ladder_json))
                 if ladder_json else None
+            ),
+            removed=removed if removed.size else None,
+            n_mutations=(
+                int(z["n_mutations"]) if "n_mutations" in z.files else 0
             ),
         )
 

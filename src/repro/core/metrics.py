@@ -36,6 +36,7 @@ def _exhaustive_topk(
     docs: jnp.ndarray,      # (n, D)
     qw: jnp.ndarray,        # (nq, D) pre-weighted normalised queries
     exclude: jnp.ndarray,   # (nq,) doc id to drop (or -1)
+    mask: jnp.ndarray,      # (n,) bool, False = doc ineligible (tombstoned)
     *,
     k: int,
     largest: bool = True,
@@ -47,14 +48,16 @@ def _exhaustive_topk(
     sign = 1.0 if largest else -1.0
     pad = (-n) % chunk
     docs_p = jnp.pad(docs, ((0, pad), (0, 0)))
+    mask_p = jnp.pad(mask, (0, pad))
     n_chunks = docs_p.shape[0] // chunk
 
     def body(carry, i):
         best_s, best_i = carry
         block = jax.lax.dynamic_slice_in_dim(docs_p, i * chunk, chunk, 0)
+        mk = jax.lax.dynamic_slice_in_dim(mask_p, i * chunk, chunk, 0)
         ids = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
         s = sign * (qw @ block.T)                       # (nq, chunk)
-        s = jnp.where(ids[None, :] < n, s, -jnp.inf)
+        s = jnp.where((ids[None, :] < n) & mk[None, :], s, -jnp.inf)
         s = jnp.where(ids[None, :] == exclude[:, None], -jnp.inf, s)
         cat_s = jnp.concatenate([best_s, s], axis=-1)
         cat_i = jnp.concatenate(
@@ -72,23 +75,38 @@ def _exhaustive_topk(
     return sign * best_s, best_i
 
 
-def brute_force_topk(docs, qw, k, *, exclude=None, chunk: int = 8192):
-    """Exact k-NN ground truth ``GT(k, q, E)``: (sims (nq,k), ids (nq,k))."""
+def _doc_mask(docs, mask):
+    if mask is None:
+        return jnp.ones((docs.shape[0],), bool)
+    return jnp.asarray(mask, bool)
+
+
+def brute_force_topk(docs, qw, k, *, exclude=None, mask=None,
+                     chunk: int = 8192):
+    """Exact k-NN ground truth ``GT(k, q, E)``: (sims (nq,k), ids (nq,k)).
+
+    ``mask`` (optional ``(n,)`` bool) restricts eligibility — False rows
+    never enter the answer. Used to keep tombstoned (removed) documents out
+    of the ground truth of a mutated index (``mask=~index.removed``).
+    """
     qw = jnp.atleast_2d(qw)
     if exclude is None:
         exclude = jnp.full((qw.shape[0],), -1, jnp.int32)
     return _exhaustive_topk(
-        docs, qw, jnp.asarray(exclude, jnp.int32), k=k, largest=True, chunk=chunk
+        docs, qw, jnp.asarray(exclude, jnp.int32), _doc_mask(docs, mask),
+        k=k, largest=True, chunk=chunk,
     )
 
 
-def brute_force_bottomk(docs, qw, k, *, exclude=None, chunk: int = 8192):
+def brute_force_bottomk(docs, qw, k, *, exclude=None, mask=None,
+                        chunk: int = 8192):
     """The farthest set ``FS(k, q, E)`` (for the NAG normaliser)."""
     qw = jnp.atleast_2d(qw)
     if exclude is None:
         exclude = jnp.full((qw.shape[0],), -1, jnp.int32)
     return _exhaustive_topk(
-        docs, qw, jnp.asarray(exclude, jnp.int32), k=k, largest=False, chunk=chunk
+        docs, qw, jnp.asarray(exclude, jnp.int32), _doc_mask(docs, mask),
+        k=k, largest=False, chunk=chunk,
     )
 
 

@@ -65,7 +65,8 @@ def fpf_centers_fused(
     interpret: bool | None = None,
 ):
     """Full Gonzalez FPF on the fused round kernel (drop-in for
-    :func:`repro.core.fpf.fpf_centers`)."""
+    :func:`repro.core.cluster.fpf_centers` — the ``fpf_fused`` registered
+    clusterer drives every build round through this)."""
     m = x.shape[0]
     first = jax.random.randint(key, (), 0, m, dtype=jnp.int32)
     idxs = [first]

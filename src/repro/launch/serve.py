@@ -17,7 +17,11 @@ the fixed ``--probes`` budget with a recall target served by the per-index
 calibrated planner (the index is calibrated right after build — sample
 queries x weight draws, probe sweep, isotonic fit), and the report prints
 the planner's predicted recall next to the achieved one, so the target is
-honest, not nominal. The raw ``(scores, ids,
+honest, not nominal. ``--mutate N`` exercises the index's incremental
+maintenance mid-serve: N new documents are ingested through
+``retriever.add`` (streamed into the padded buckets, NO rebuild), verified
+retrievable, then removed again and verified gone — the serving loop never
+restarts. The raw ``(scores, ids,
 n_scored)`` tuple surface lives only inside :mod:`repro.core.engine` — this
 driver speaks requests and responses exclusively. LM serving
 (prefill/decode) lives in examples/serve_lm.py; this driver is the paper's
@@ -128,6 +132,11 @@ def main():
     ap.add_argument("--compare", action="store_true",
                     help="serve the same requests through every runnable "
                          "backend and report per-backend latency")
+    ap.add_argument("--mutate", type=int, default=0, metavar="N",
+                    help="after serving, add N new documents through "
+                         "retriever.add (incremental bucket maintenance, no "
+                         "rebuild), verify they are retrievable, then remove "
+                         "them and verify they are gone")
     args = ap.parse_args()
 
     # Materialise the bucket-major layout at build time whenever the fused
@@ -230,6 +239,44 @@ def main():
         for name, dt, cr, nag, frac in report:
             print(f"{name},{dt / args.queries * 1e3:.3f},{cr:.2f},"
                   f"{nag:.4f},{frac:.3f}")
+
+    if args.mutate > 0:
+        # Incremental maintenance round-trip: ingest exact copies of the
+        # first N query documents — a copy is its original's true nearest
+        # neighbour, so "the copy is hit #1 for like=original" is a sharp
+        # end-to-end check that adds really land in the probed buckets.
+        n_mut = min(args.mutate, args.queries)
+        src = qids[:n_mut]
+        t0 = time.time()
+        new_ids = retriever.add(docs[src])
+        dt_add = time.time() - t0
+        reqs = make_requests(src, w[:n_mut], spec, probes=args.probes,
+                             k=args.k)
+        responses = serve_requests(retriever, reqs)
+        found = sum(
+            1 for r, nid in zip(responses, new_ids)
+            if r.hits and r.hits[0].doc_id == int(nid)
+        )
+        print(f"[serve] mutate: added {n_mut} docs in {dt_add * 1e3:.1f} ms "
+              f"(no rebuild, index now {retriever.index.n_live} live docs); "
+              f"{found}/{n_mut} copies came back as hit #1")
+        t0 = time.time()
+        retriever.remove(new_ids)
+        dt_rm = time.time() - t0
+        responses = serve_requests(retriever, reqs)
+        removed_set = set(map(int, new_ids))
+        leaked = sum(
+            1 for r in responses
+            if any(h.doc_id in removed_set for h in r.hits)
+        )
+        print(f"[serve] mutate: removed them again in {dt_rm * 1e3:.1f} ms; "
+              f"{leaked} leaked back into any top-k "
+              f"({'OK' if leaked == 0 else 'FAIL'})")
+        if found < n_mut or leaked:
+            raise SystemExit(
+                f"[serve] mutate round-trip failed: {found}/{n_mut} adds "
+                f"retrieved, {leaked} removals leaked"
+            )
 
 
 if __name__ == "__main__":

@@ -268,3 +268,112 @@ def test_index_search_qchunk_silent_drop_fixed(retriever, api_corpus):
     s, i, n = idx.search(qw, probes=6, k=5, qchunk=4, backend="reference")
     s2, i2, n2 = idx.search(qw, probes=6, k=5, backend="fused")
     assert np.array_equal(np.asarray(i), np.asarray(i2))
+
+
+# ---------------------------------------------- request caching + mutation
+@pytest.fixture()
+def fresh_retriever(api_corpus):
+    """Function-scoped: caching/mutation tests get their own index."""
+    docs, spec = api_corpus
+    r = Retriever.build(
+        docs[:600], spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), backend="reference",
+    )
+    return r, docs, spec
+
+
+def test_repeat_request_served_from_cache(fresh_retriever):
+    """Byte-identical MLT repeats return the SAME response object; raw
+    vector queries are not memoised."""
+    retriever, docs, spec = fresh_retriever
+    req = SearchRequest(like=12, weights={"title": 0.5, "abstract": 0.5},
+                        probes=9, k=5)
+    first = retriever.search(req)
+    again = retriever.search(
+        SearchRequest(like=12, weights={"title": 0.5, "abstract": 0.5},
+                      probes=9, k=5))
+    assert again is first
+    # a different weight draw is a different answer, not a cache hit
+    other = retriever.search(
+        SearchRequest(like=12, weights={"title": 0.9, "abstract": 0.1},
+                      probes=9, k=5))
+    assert other is not first
+    # vector-query requests bypass the response cache
+    vec = SearchRequest(query=docs[12], probes=9, k=5, exclude=12)
+    assert retriever.search(vec) is not retriever.search(vec)
+
+
+def test_qw_reduction_memoised(fresh_retriever):
+    retriever, docs, spec = fresh_retriever
+    reqs = [SearchRequest(like=5, weights=(0.2, 0.3, 0.5), probes=6, k=4),
+            SearchRequest(like=5, weights=(0.2, 0.3, 0.5), probes=12, k=4)]
+    retriever.search(reqs)     # same (like, weights) key, different probes
+    assert len(retriever._qw_cache) == 1
+    assert len(retriever._response_cache) == 2
+
+
+def test_cache_invalidated_by_mutation(fresh_retriever):
+    """retriever.add/remove flush the caches, and the next answer reflects
+    the mutated corpus (an exact copy must take over as hit #1)."""
+    retriever, docs, spec = fresh_retriever
+    req = SearchRequest(like=33, probes=12, k=5)
+    before = retriever.search(req)
+    assert retriever.search(req) is before
+    [new_id] = retriever.add(docs[33][None, :])
+    after = retriever.search(req)
+    assert after is not before
+    assert after.hits[0].doc_id == int(new_id)
+    assert retriever.remove([new_id]) == 1
+    final = retriever.search(req)
+    assert int(new_id) not in final.ids
+    assert np.array_equal(final.doc_ids, before.doc_ids)
+
+
+def test_cache_invalidated_by_direct_index_mutation(fresh_retriever):
+    """Mutations applied to the index directly (not through the facade)
+    must also flush — the version counter is the coherency token."""
+    retriever, docs, spec = fresh_retriever
+    req = SearchRequest(like=8, probes=12, k=5)
+    before = retriever.search(req)
+    retriever.index.add_documents(docs[8][None, :])
+    after = retriever.search(req)
+    assert after is not before
+    assert after.hits[0].doc_id == 600      # the copy, appended at n=600
+
+
+def test_stale_ladder_warns_without_calibrate(fresh_retriever):
+    import warnings as _w
+
+    from repro.core import calibrate_index
+
+    retriever, docs, spec = fresh_retriever
+    calibrate_index(retriever.index, n_queries=8, n_weight_draws=2,
+                    probe_grid=(3, 12))
+    retriever.search(SearchRequest(like=1, recall_target=0.8, k=5))
+    retriever.add(docs[:100])               # 100/600 churn: stale
+    assert retriever.index.ladder_stale
+    with pytest.warns(UserWarning, match="stale"):
+        retriever.search(SearchRequest(like=1, recall_target=0.8, k=5))
+    # warned once, not per request
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        retriever.search(SearchRequest(like=2, recall_target=0.8, k=5))
+
+
+def test_stale_ladder_refit_with_calibrate(api_corpus):
+    docs, spec = api_corpus
+    retriever = Retriever.build(
+        docs[:600], spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), backend="reference", calibrate=True,
+        calibrate_opts={"n_queries": 8, "n_weight_draws": 2,
+                        "probe_grid": (3, 12)},
+    )
+    retriever.search(SearchRequest(like=1, recall_target=0.8, k=5))
+    first_ladder = retriever.index.ladder
+    assert first_ladder is not None
+    retriever.add(docs[:100])
+    assert retriever.index.ladder_stale
+    retriever.search(SearchRequest(like=1, recall_target=0.8, k=5))
+    assert retriever.index.ladder is not first_ladder   # refit
+    assert retriever.index.n_mutations == 0
+    assert not retriever.index.ladder_stale

@@ -31,12 +31,12 @@ def test_brute_force_is_exact(random_corpus):
     assert set(map(int, fi[0])) == set(map(int, ref_far[0]))
 
 
-@pytest.mark.parametrize("method", ["fpf", "kmeans", "random"])
+@pytest.mark.parametrize("method", ["fpf", "fpf_fused", "kmeans", "random"])
 def test_clusterers_cover(random_corpus, method):
     docs, spec = random_corpus
-    from repro.core import CLUSTERERS
+    from repro.core import get_clusterer
 
-    res = CLUSTERERS[method](docs, 16, jax.random.PRNGKey(0))
+    res = get_clusterer(method).cluster(docs, 16, jax.random.PRNGKey(0))
     assert res.reps.shape == (16, docs.shape[1])
     assert int(jnp.sum(res.counts)) == docs.shape[0]
     assert float(res.max_radius) <= 2.0 + 1e-5
