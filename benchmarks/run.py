@@ -5,6 +5,7 @@
 table1  preprocessing time/space (clusterer seam + FPF vs k-means vs PODS07)
 fig1    query time + distance computations vs visited clusters
 table2  recall + NAG over the paper's 7 weight sets
+throughput  serving QPS vs batch size per backend (query-tiled fused path)
 kernels Pallas-vs-oracle agreement + VMEM working sets
 roofline the dry-run roofline table (requires results/dryrun/)
 
@@ -39,11 +40,12 @@ def main() -> None:
     t0 = time.time()
 
     from . import fig1_querytime, kernels_bench, roofline_report
-    from . import table1_preprocessing, table2_quality
+    from . import table1_preprocessing, table2_quality, throughput
 
     pre = table1_preprocessing.run(scale)
     fig1 = fig1_querytime.run(scale)
     table2 = table2_quality.run(scale)
+    thr = throughput.run(scale)
     kernels_bench.run()
     roofline_report.run()
 
@@ -59,6 +61,11 @@ def main() -> None:
         "table2": {
             f"{w}/{a}": {"recall": rec, "nag": nag}
             for (w, a), (rec, nag) in table2.items()
+        },
+        # serving throughput: backend -> {batch size -> QPS}
+        "throughput": {
+            name: {str(bs): qps for bs, qps in rows.items()}
+            for name, rows in thr.items()
         },
     })
     print(f"\n# benchmarks done in {time.time() - t0:.1f}s (scale={scale})")

@@ -1,0 +1,89 @@
+"""Serving throughput: QPS vs batch size, per search backend.
+
+The paper reports per-query latency (Fig 1); a serving system's headline is
+*throughput* — how many queries per second one host sustains when requests
+arrive in batches. This is exactly the axis the query-tiled ``bucket_score``
+v2 kernel targets: a batch shares one probe-dedup schedule per query tile,
+so popular buckets are read from HBM once per tile instead of once per
+query, and each block read feeds a ``(QT, D)×(D, B)`` MXU matmul instead of
+a matvec. Off-TPU the fused backend runs the Pallas kernel in interpret
+mode — its numbers there are a correctness smoke, not a speed claim (the
+reference backend is the honest CPU row).
+
+Measured at the engine seam (one ``engine.search`` call per batch — the
+same call ``Retriever._search_batch`` issues per execution-shape group), so
+the numbers isolate the scoring mechanism from response assembly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClusterPruneIndex, available_backends, get_engine
+from repro.data import CorpusConfig, make_corpus
+
+from .common import bench_sizes, std_parser, timed
+
+K_NN = 10
+PROBES = 12
+BATCH_SIZES = (1, 8, 64)
+
+
+def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
+        backends=None, pack_dtype=None):
+    sz = bench_sizes(scale)
+    docs_np, spec, _ = make_corpus(CorpusConfig(
+        n_docs=sz["n_docs"], field_dims=sz["field_dims"],
+        vocab_sizes=sz["vocab_sizes"], n_topics=sz["n_topics"],
+        topic_mix_alpha=sz["topic_mix_alpha"],
+        noise_terms=sz["noise_terms"], seed=seed,
+    ))
+    docs = jnp.asarray(docs_np)
+    index = ClusterPruneIndex.build(
+        docs, spec, sz["k_clusters"], n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(seed), pack_major=True, pack_dtype=pack_dtype,
+    )
+    rng = np.random.default_rng(seed)
+    if backends is None:
+        backends = available_backends()
+
+    dtype = pack_dtype or "float32"
+    print(f"\n# Throughput — QPS vs batch size (n={sz['n_docs']}, "
+          f"probes={PROBES}, k={K_NN}, pack={dtype}, "
+          f"platform={jax.default_backend()}; fused is interpret-mode "
+          f"off-TPU)")
+    print("backend,batch,qps,ms_per_query")
+    out = {}
+    for name in backends:
+        try:
+            engine = get_engine(index, name)
+        except Exception as e:          # e.g. sharded divisibility
+            print(f"# {name} skipped: {e}")
+            continue
+        rows = {}
+        for bs in batch_sizes:
+            qids = rng.choice(sz["n_docs"], bs, replace=False)
+            qw = docs[jnp.asarray(qids)]
+            ex = jnp.asarray(qids, jnp.int32)
+            t, _ = timed(
+                lambda e=engine, q=qw, x=ex: e.search(
+                    q, probes=PROBES, k=K_NN, exclude=x
+                )
+            )
+            qps = bs / t
+            rows[bs] = qps
+            print(f"{name},{bs},{qps:.1f},{t / bs * 1e3:.3f}")
+        out[name] = rows
+    return out
+
+
+if __name__ == "__main__":
+    parser = std_parser(__doc__)
+    parser.add_argument(
+        "--pack-dtype", default=None, choices=[None, "bfloat16"],
+        help="bucket-major storage dtype for the fused backend "
+             "(bfloat16 halves packed HBM bytes)")
+    args = parser.parse_args()
+    run(args.scale, args.seed, pack_dtype=args.pack_dtype)

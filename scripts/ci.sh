@@ -7,11 +7,16 @@
 #                           driver with a live add/remove round-trip, the
 #                           heterogeneous-batch example with its mutating-
 #                           corpus tail (request cache -> add -> invalidate
-#                           -> remove), and the Table-1 preprocessing
-#                           benchmark through the clusterer seam (both FPF
-#                           backends), so regressions anywhere in the
-#                           build->serve->mutate path fail CI, not just
-#                           unit tests
+#                           -> remove), the Table-1 preprocessing benchmark
+#                           through the clusterer seam (both FPF backends),
+#                           and the serving-throughput benchmark (QPS vs
+#                           batch size on every backend — off-TPU this runs
+#                           the query-tiled bucket_score v2 kernel in
+#                           interpret mode, so schedule construction, tile
+#                           padding and the bf16-free fused path are all
+#                           exercised end to end), so regressions anywhere
+#                           in the build->serve->mutate path fail CI, not
+#                           just unit tests
 #
 # Extra args are forwarded to pytest in both modes.
 set -euo pipefail
@@ -38,4 +43,7 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: Table-1 preprocessing through the clusterer seam"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.table1_preprocessing --scale quick
+  echo "[ci] smoke: serving throughput (tiled bucket_score v2, interpret off-TPU)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.throughput --scale quick
 fi

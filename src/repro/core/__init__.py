@@ -29,6 +29,7 @@ from .cluster import (
     ClusteringResult,
     assign_refine,
     assign_to_centers,
+    assign_to_centers_multi,
     available_clusterers,
     fpf_centers,
     fpf_cluster,
@@ -77,7 +78,8 @@ __all__ = [
     "FieldSpec", "concat_fields", "normalize_fields", "split_fields",
     "aggregate_similarity", "cosine_distance", "expand_weights", "nwd",
     "validate_weights", "weighted_query",
-    "ClusteringResult", "assign_to_centers", "fpf_centers", "fpf_cluster",
+    "ClusteringResult", "assign_to_centers", "assign_to_centers_multi",
+    "fpf_centers", "fpf_cluster",
     "kmeans_cluster", "random_leader_cluster",
     "CLUSTERERS", "Clusterer", "assign_refine", "available_clusterers",
     "get_clusterer", "pick_clusterer", "register_clusterer",

@@ -336,7 +336,8 @@ class Retriever:
 
     def __init__(self, index: ClusterPruneIndex, *, backend: str = "auto",
                  default_probes: int = 12, calibrate: bool = False,
-                 calibrate_opts: Mapping | None = None):
+                 calibrate_opts: Mapping | None = None,
+                 engine_opts: Mapping | None = None):
         from .engine import pick_backend
 
         self.index = index
@@ -344,6 +345,14 @@ class Retriever:
             pick_backend(index) if backend in (None, "auto") else backend
         )
         self.default_probes = default_probes
+        # Engine construction knobs for the DEFAULT backend (e.g.
+        # ``{"query_tile": 16}`` for the fused backend's v2 tiling, or
+        # ``{"qchunk": 4}`` for reference) — resolved through the
+        # opts-keyed get_engine cache, so the variant engine is built and
+        # traced once. Per-request backend= overrides use that backend's
+        # defaults: the opts were chosen for self.backend and may not even
+        # be valid kwargs elsewhere.
+        self.engine_opts = dict(engine_opts or {})
         # ``calibrate=True``: an index without a fitted ladder gets one
         # lazily, on the first recall_target= request (paid once) — and a
         # ladder gone stale from corpus churn gets REFIT the same way;
@@ -382,9 +391,16 @@ class Retriever:
         default_probes: int = 12,
         calibrate: bool | Mapping = False,
         calibrate_opts: Mapping | None = None,
+        engine_opts: Mapping | None = None,
         **build_kwargs,
     ) -> "Retriever":
         """Build the weight-free index and wrap it (one-stop constructor).
+
+        ``build_kwargs`` pass through to
+        :meth:`ClusterPruneIndex.build` — notably ``pack_dtype="bfloat16"``
+        for half-precision bucket-major storage — and ``engine_opts`` to
+        every engine resolution for the default backend (e.g.
+        ``{"query_tile": 16}``).
 
         Pass ``calibrate=True`` (or a dict of
         :func:`~repro.core.calibrate.calibrate_index` options) to fit the
@@ -415,7 +431,8 @@ class Retriever:
             **build_kwargs,
         )
         return cls(index, backend=backend, default_probes=default_probes,
-                   calibrate=opted_in, calibrate_opts=opts)
+                   calibrate=opted_in, calibrate_opts=opts,
+                   engine_opts=engine_opts)
 
     @property
     def spec(self) -> FieldSpec:
@@ -661,7 +678,8 @@ class Retriever:
             groups.setdefault((backend, probes, r.k), []).append(j)
 
         for (backend, probes, k), rows in groups.items():
-            engine = get_engine(index, backend)
+            opts = self.engine_opts if backend == self.backend else {}
+            engine = get_engine(index, backend, **opts)
             qw = qw_all[jnp.asarray(rows)]
             excl = jnp.asarray(excl_all[rows])
             t0 = time.perf_counter()

@@ -188,6 +188,7 @@ def calibrate_index(
     probe_grid: Sequence[int] | None = None,
     seed: int = 0,
     backend: str | None = None,
+    engine_opts: Mapping | None = None,
     store: bool = True,
 ) -> ProbeLadder:
     """Fit a :class:`ProbeLadder` for one built index (sample -> sweep -> fit).
@@ -200,7 +201,9 @@ def calibrate_index(
     through :func:`repro.core.engine.sweep_probes` on ``backend`` (None =
     platform auto-pick) — quality is mechanism-independent (backend parity
     is enforced by tests/test_engine.py), so the cheapest available engine
-    gives the same curve.
+    gives the same curve; ``engine_opts`` (e.g. ``{"query_tile": 16}`` for
+    the fused backend) pass through to the sweep's engine resolution, which
+    reuses opts-keyed cached engines across levels and repeat calibrations.
 
     ``store=True`` (default) attaches the ladder to ``index.ladder``, where
     ``Retriever._plan`` and ``ClusterPruneIndex.save`` pick it up, and
@@ -255,7 +258,8 @@ def calibrate_index(
     _, gt_ids = brute_force_topk(docs, qw, k, exclude=exclude, mask=mask)
 
     sweep = sweep_probes(
-        index, qw, probe_grid=grid, k=k, exclude=exclude, backend=backend
+        index, qw, probe_grid=grid, k=k, exclude=exclude, backend=backend,
+        engine_opts=engine_opts,
     )
     measured = [
         float(jnp.mean(recall_fraction(ids, gt_ids))) for _, ids, _ in sweep

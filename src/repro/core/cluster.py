@@ -68,6 +68,7 @@ __all__ = [
     "get_clusterer",
     "fpf_centers",
     "assign_to_centers",
+    "assign_to_centers_multi",
     "assign_refine",
     "fpf_cluster",
     "kmeans_cluster",
@@ -180,18 +181,45 @@ def assign_to_centers(
     Chunked over rows so the (n, K) similarity matrix never fully
     materialises. Returns ``(assign (n,), sim (n,))``. This is the ONE
     assignment primitive: the build tail (:func:`assign_refine`) and
-    incremental ``add_documents`` both stream through it.
+    incremental ``add_documents`` both stream through it — the single-
+    clustering case of :func:`assign_to_centers_multi`, so the two can
+    never drift in argmax/tie-break semantics.
     """
+    a, s = assign_to_centers_multi(x, reps[None], chunk=chunk)
+    return a[0], s[0]
+
+
+def assign_to_centers_multi(
+    x: jnp.ndarray, leaders: jnp.ndarray, *, chunk: int = 16384
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Assign every point under ALL T clusterings with one fused matmul.
+
+    ``leaders`` is the index's ``(T, K, D)`` tensor; each chunk of rows is
+    scored against the flattened ``(T·K, D)`` leader matrix in a single
+    device call and the per-clustering argmax is taken over each K-segment
+    — T times fewer kernel launches than looping :func:`assign_to_centers`
+    over clusterings, and one big MXU matmul instead of T skinny ones.
+    The segment reshape does not reorder within a clustering, so argmax
+    tie-breaks match the single-clustering case by construction.
+    Returns ``(assign (T, n) int32, sim (T, n))``. This is what
+    :meth:`repro.core.index.ClusterPruneIndex.add_documents` streams
+    batched ingests through.
+    """
+    t, k, d = leaders.shape
+    flat = leaders.reshape(t * k, d)
     n = x.shape[0]
     pad = (-n) % chunk
     xp = jnp.pad(x, ((0, pad), (0, 0)))
 
     def one(block):
-        sims = block @ reps.T  # (chunk, K)
+        sims = (block @ flat.T).reshape(block.shape[0], t, k)
         return jnp.argmax(sims, axis=-1).astype(jnp.int32), jnp.max(sims, -1)
 
-    a, s = jax.lax.map(one, xp.reshape(-1, chunk, x.shape[1]))
-    return a.reshape(-1)[:n], s.reshape(-1)[:n]
+    a, s = jax.lax.map(one, xp.reshape(-1, chunk, d))
+    return (
+        a.reshape(-1, t)[:n].T,
+        s.reshape(-1, t)[:n].T,
+    )
 
 
 def _medoids(

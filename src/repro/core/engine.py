@@ -10,9 +10,13 @@ distributed path with its own API. This module unifies them behind a single
     Pure-JAX doc-major gather (:func:`_search_block`) — the single-host
     portable path and the semantics oracle for the other two.
 ``fused``
-    The Pallas ``bucket_score`` kernel over the bucket-major ``(T*K, B, D)``
-    corpus materialised at index build time (interpret-mode off-TPU), so a
-    probe is a contiguous block DMA instead of a row gather.
+    The query-tiled Pallas ``bucket_score`` v2 kernel over the bucket-major
+    ``(T*K, B, D)`` corpus materialised at index build time (interpret-mode
+    off-TPU): probes are contiguous block DMAs instead of row gathers, a
+    per-tile probe-dedup schedule reads each shared bucket from HBM once
+    per query tile, and each block is scored against the whole tile as one
+    ``(QT, D)×(D, B)`` MXU matmul (optionally over bf16 bucket storage with
+    fp32 accumulation).
 ``sharded``
     The ``shard_map`` doc-sharded path of :mod:`repro.core.distributed` —
     local scoring, one collective-light top-k merge.
@@ -120,22 +124,36 @@ def pick_backend(index=None) -> str:
 
 
 def get_engine(index, backend: str = "auto", **opts) -> SearchEngine:
-    """Engine for ``index``. No-opts engines are cached on the index."""
+    """Engine for ``index``, cached on the index keyed by ``(name, opts)``.
+
+    Keying the per-index cache by the opts (not just the backend name)
+    means variant engines — a sweep's per-level ``qchunk``, an explicit
+    ``query_tile`` or ``interpret`` override — are constructed and traced
+    ONCE and then reused, instead of rebuilt per call (an L-level
+    ``sweep_probes`` used to re-instantiate and re-trace the reference
+    engine at every level). Unhashable opts (e.g. a ``mesh`` object) fall
+    back to an uncached construction.
+    """
     name = pick_backend(index) if backend in (None, "auto") else backend
     if name not in BACKENDS:
         raise ValueError(
             f"unknown backend {name!r}; available: {sorted(BACKENDS)}"
         )
     cls = BACKENDS[name]
-    if opts:
+    try:
+        key = (name, tuple(sorted(opts.items())))
+        hash(key)
+    except TypeError:
+        key = None
+    if key is None:
         return cls(index, **opts)
     cache = getattr(index, "_engines", None)
     if cache is None:
         cache = {}
         index._engines = cache
-    if name not in cache:
-        cache[name] = cls(index)
-    return cache[name]
+    if key not in cache:
+        cache[key] = cls(index, **opts)
+    return cache[key]
 
 
 # Memory cap for the reference backend's (qchunk, m, D) candidate gather
@@ -153,6 +171,7 @@ def sweep_probes(
     exclude: jnp.ndarray | None = None,
     nav_query: jnp.ndarray | None = None,
     backend: str | None = None,
+    engine_opts=None,
 ) -> list[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
     """Run ONE engine over a probe grid — the planner-calibration sweep.
 
@@ -161,7 +180,12 @@ def sweep_probes(
     an L-level sweep costs L searches, not L index preparations. For the
     ``reference`` backend the query-chunk size is adapted per level so the
     ``(qchunk, candidates, D)`` gather stays within a fixed memory budget —
-    high probe budgets would otherwise materialise multi-GB intermediates.
+    high probe budgets would otherwise materialise multi-GB intermediates;
+    the opts-keyed ``get_engine`` cache makes those per-level variants
+    construct-and-trace once, so repeating a sweep (or sharing a qchunk
+    between levels) pays no engine churn. ``engine_opts`` pass through to
+    every ``get_engine`` resolution (e.g. ``query_tile=`` for the fused
+    backend).
 
     Returns one ``(scores, ids, n_scored)`` tuple per grid entry, in grid
     order.
@@ -170,18 +194,18 @@ def sweep_probes(
     grid = [int(p) for p in probe_grid]
     if not grid:
         return []
+    opts = dict(engine_opts or {})
     b = int(index.buckets.shape[-1])
     d = int(index.docs.shape[-1])
-    engine = get_engine(index, name)
     out = []
     for probes in grid:
-        eng = engine
-        if name == "reference":
+        level_opts = opts
+        if name == "reference" and "qchunk" not in opts:
             qchunk = max(
                 1, min(8, _SWEEP_GATHER_BYTES // max(1, probes * b * d * 4))
             )
-            if qchunk != getattr(engine, "qchunk", qchunk):
-                eng = get_engine(index, name, qchunk=int(qchunk))
+            level_opts = {**opts, "qchunk": int(qchunk)}
+        eng = get_engine(index, name, **level_opts)
         out.append(
             eng.search(qw, probes=probes, k=k, exclude=exclude,
                        nav_query=nav_query)
@@ -340,28 +364,68 @@ def _search_block(
 # ---------------------------------------------------------------------- fused
 @register_backend("fused")
 class FusedEngine(_EngineBase):
-    """Pallas ``bucket_score`` over the bucket-major corpus.
+    """Query-tiled Pallas ``bucket_score`` v2 over the bucket-major corpus.
 
-    Probing selects rows of the ``(T*K, B, D)`` tensor materialised by
-    ``ClusterPruneIndex.build`` (or lazily on first use), so each probed
-    bucket is a contiguous block read scored on the MXU; the in-kernel
-    running top-k suppresses duplicates across overlapping clusterings.
-    Runs interpreted off-TPU (bit-compatible, slow — tests/CI only).
+    Queries are grouped into tiles of ``query_tile`` (default: sized from
+    the kernel's VMEM budget by
+    :func:`repro.kernels.bucket_score.ops.pick_query_tile`); for each tile
+    the engine builds a **probe-dedup schedule** — the union of the tile's
+    flat probe lists with every shared bucket appearing once
+    (:func:`~repro.kernels.bucket_score.ops.build_probe_schedule`) — and the
+    kernel scores each DMA'd bucket block against the whole tile as one
+    ``(QT, D)×(D, B)`` MXU matmul with per-query membership masking. A
+    bucket probed by many queries of a tile is read from HBM once per tile
+    instead of once per query, so batched throughput scales with the MXU
+    rather than with redundant block reads; ragged batch tails are padded
+    to the tile and sliced off. The in-kernel running top-k suppresses
+    duplicates across overlapping clusterings exactly like the reference
+    path, and the bucket-major tensor may be stored bf16
+    (``ClusterPruneIndex`` ``pack_dtype``) with fp32 accumulation.
+
+    Schedule construction syncs the probe tensor to the host (numpy) — the
+    engine API is synchronous anyway, and a data-dependent schedule is the
+    whole point (a static-shape device schedule would be the dedup-free
+    worst case). Runs interpreted off-TPU (bit-compatible, slow — tests/CI
+    only).
     """
 
-    def __init__(self, index, *, interpret: bool | None = None):
+    def __init__(
+        self,
+        index,
+        *,
+        interpret: bool | None = None,
+        query_tile: int | None = None,
+    ):
         super().__init__(index)
         self.interpret = interpret
+        self.query_tile = query_tile
 
     def search(self, qw, *, probes, k, exclude=None, nav_query=None):
-        from ..kernels.bucket_score import bucket_score
+        import numpy as np
+
+        from ..kernels.bucket_score import bucket_score_tiled
+        from ..kernels.bucket_score.ops import (
+            build_probe_schedule, pick_query_tile,
+        )
+        from ..kernels.common import pad_to
 
         qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
         data, ids = self.index.ensure_bucket_major()     # (T*K, B, D), (T*K, B)
         flat = self._flat_probes(nav, self._probes_t(probes))
-        s, i = bucket_score(
-            qw, data, ids, flat, k=k, exclude=exclude,
-            interpret=self.interpret,
+        b, d = int(data.shape[1]), int(data.shape[2])
+        qt = self.query_tile
+        if qt is None:
+            # VMEM budget caps the tile; the batch floors it — a small
+            # batch padded to a large tile would matmul and top-k mostly
+            # dead rows per scheduled bucket.
+            qt = min(
+                pick_query_tile(d, b, k_pad=pad_to(k, 8)),
+                pad_to(qw.shape[0], 8),
+            )
+        sched, member = build_probe_schedule(np.asarray(flat), qt)
+        s, i = bucket_score_tiled(
+            qw, data, ids, jnp.asarray(sched), jnp.asarray(member),
+            k=k, exclude=exclude, interpret=self.interpret,
         )
         i = jnp.where(jnp.isfinite(s), i, -1)
         return self._finish(single, s, i, self._n_scored(flat))

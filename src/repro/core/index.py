@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cluster import assign_to_centers, get_clusterer
+from .cluster import assign_to_centers_multi, get_clusterer
 from .fields import FieldSpec, normalize_fields
 from .weights import weighted_query
 
@@ -94,7 +94,7 @@ def pack_buckets(
 
 
 def pack_buckets_major(
-    docs: jnp.ndarray, buckets: jnp.ndarray, n: int
+    docs: jnp.ndarray, buckets: jnp.ndarray, n: int, dtype=None
 ) -> jnp.ndarray:
     """Bucket-major layout: (n, D) corpus + (T, K, B) ids -> (T, K, B, D).
 
@@ -104,10 +104,18 @@ def pack_buckets_major(
     bucket as a contiguous block instead of a row gather. Delegates to the
     kernel-side :func:`repro.kernels.bucket_score.ops.pack_bucket_major`
     after normalising this module's sentinel-``n`` padding to its ``-1``.
+
+    ``dtype`` (e.g. ``"bfloat16"``) selects a reduced storage precision for
+    the packed tensor — half the HBM bytes and half the scoring bandwidth;
+    the fused kernel accumulates fp32 regardless, and navigation keeps the
+    fp32 leaders. The doc-major corpus and every other consumer stay fp32.
     """
     from ..kernels.bucket_score.ops import pack_bucket_major
 
-    data, _ = pack_bucket_major(docs, jnp.where(buckets < n, buckets, -1))
+    data, _ = pack_bucket_major(
+        docs, jnp.where(buckets < n, buckets, -1),
+        dtype=None if dtype is None else jnp.dtype(dtype),
+    )
     return data
 
 
@@ -123,6 +131,7 @@ class ClusterPruneIndex:
     method: str = "fpf"
     assign: np.ndarray | None = None        # (T, n) cluster of each doc (-1 = removed)
     bucket_data: jnp.ndarray | None = None  # (T, K, B, D) bucket-major corpus
+    pack_dtype: str | None = None           # bucket-major storage dtype (None = docs')
     ladder: object | None = None            # fitted ProbeLadder (or None)
     removed: np.ndarray | None = None       # (n,) bool tombstones (or None)
     version: int = 0                        # bumped on every mutation
@@ -140,6 +149,7 @@ class ClusterPruneIndex:
         method: str = "auto",
         key: jax.Array | None = None,
         pack_major: bool | None = None,
+        pack_dtype=None,
         calibrate: bool | dict = False,
         **clusterer_kwargs,
     ) -> "ClusterPruneIndex":
@@ -159,6 +169,14 @@ class ClusterPruneIndex:
         it to the first fused search, None (default) materialises it only on
         TPU (the fused auto-pick platform) and within a modest memory budget
         — either way the layout conversion happens exactly once per index.
+
+        ``pack_dtype`` (e.g. ``"bfloat16"``): storage dtype of the
+        bucket-major tensor only — halves its HBM footprint and the
+        bandwidth the fused scoring matmul must hide, doubling the corpus
+        that fits the pack budget; the kernel accumulates fp32
+        (``preferred_element_type``) and navigation keeps the fp32 leaders.
+        Persisted with the index, honoured by every (re-)pack including the
+        lazy one after mutations. None keeps the corpus dtype (fp32).
 
         ``calibrate``: opt-in planner calibration at build — True fits the
         per-index recall->probes :class:`~repro.core.calibrate.ProbeLadder`
@@ -187,10 +205,15 @@ class ClusterPruneIndex:
             for ids in ids_l
         ]
         buckets = jnp.asarray(np.stack(ids_l))
+        pack_dtype = None if pack_dtype is None else jnp.dtype(pack_dtype).name
         if pack_major is None:
+            itemsize = (
+                docs.dtype.itemsize if pack_dtype is None
+                else jnp.dtype(pack_dtype).itemsize
+            )
             pack_major = (
                 jax.default_backend() == "tpu"
-                and buckets.size * docs.shape[1] * docs.dtype.itemsize
+                and buckets.size * docs.shape[1] * itemsize
                 <= _PACK_MAJOR_AUTO_BYTES
             )
         index = cls(
@@ -202,8 +225,10 @@ class ClusterPruneIndex:
             method=clusterer.name,
             assign=np.stack(assign_l).astype(np.int64),
             bucket_data=(
-                pack_buckets_major(docs, buckets, n) if pack_major else None
+                pack_buckets_major(docs, buckets, n, dtype=pack_dtype)
+                if pack_major else None
             ),
+            pack_dtype=pack_dtype,
         )
         from collections.abc import Mapping
 
@@ -273,13 +298,16 @@ class ClusterPruneIndex:
     ) -> np.ndarray:
         """Ingest documents WITHOUT a rebuild; returns their new doc ids.
 
-        Each new document is streamed through the same
-        :func:`~repro.core.cluster.assign_to_centers` primitive the build
-        tail uses (against every clustering's leaders) and inserted into a
-        free padded slot of its bucket; ``B`` grows (to the next sublane
-        multiple of 8) only when a bucket overflows. Leaders are NOT moved —
-        that is the paper's serve-time contract (representatives drift is
-        what the :attr:`ladder_stale` threshold prices in).
+        The whole batch is assigned under all T clusterings by ONE fused
+        device call (:func:`~repro.core.cluster.assign_to_centers_multi` —
+        a single ``(chunk, T·K)`` matmul per chunk, same argmax semantics
+        as the build tail's per-clustering
+        :func:`~repro.core.cluster.assign_to_centers`), then inserted into
+        free padded bucket slots by a single vectorised host-side scatter;
+        ``B`` grows (to the next sublane multiple of 8) only when a bucket
+        overflows. Leaders are NOT moved — that is the paper's serve-time
+        contract (representative drift is what the :attr:`ladder_stale`
+        threshold prices in).
 
         ``new_docs`` rows are per-field unit-normalised on ingestion (a
         no-op for vectors that already follow the corpus convention).
@@ -298,20 +326,20 @@ class ClusterPruneIndex:
         n_new = n_old + m
         t, k_clusters, b = self.buckets.shape
 
-        # Stream through the shared assignment primitive, one clustering at
-        # a time (leaders are (K, D) rows of the (T, K, D) tensor).
-        new_assign = np.stack([
-            np.asarray(
-                assign_to_centers(new_docs, self.leaders[ti], chunk=chunk)[0]
-            )
-            for ti in range(t)
-        ]).astype(np.int64)                               # (T, m)
+        # ONE fused (m, T·K) assignment matmul over all T clusterings —
+        # large ingests are a single device call, not a Python loop over T.
+        new_assign = np.asarray(
+            assign_to_centers_multi(new_docs, self.leaders, chunk=chunk)[0]
+        ).astype(np.int64)                                # (T, m)
 
         all_assign = self.assignments()                   # (T, n_old), pre-add
         counts = np.asarray(self.counts).copy()
         add_counts = np.zeros_like(counts)
-        for ti in range(t):
-            np.add.at(add_counts[ti], new_assign[ti], 1)
+        np.add.at(
+            add_counts,
+            (np.repeat(np.arange(t), m), new_assign.reshape(-1)),
+            1,
+        )
 
         # Grow B only on overflow; invalid slots always hold the CURRENT
         # sentinel (== n_docs), so valid entries are exactly ``< n_old``.
@@ -322,14 +350,24 @@ class ClusterPruneIndex:
         live = bk < n_old
         out[:, :, :b][live] = bk[live]
 
+        # Single host-side scatter into free slots: sort the (clustering,
+        # cluster) keys once, rank each new doc within its bucket group,
+        # and land rank j in the j-th free column of its row. Free slots
+        # are not necessarily a suffix (removals punch holes), so the free
+        # columns are ranked per row too (stable argsort: free-first,
+        # ascending column).
         ids_new = np.arange(n_old, n_new, dtype=np.int64)
-        for ti in range(t):
-            a = new_assign[ti]
-            for c in np.unique(a):
-                docs_c = ids_new[a == c].astype(np.int32)
-                row = out[ti, c]
-                free = np.flatnonzero(row == n_new)[: len(docs_c)]
-                row[free] = docs_c
+        rows = out.reshape(t * k_clusters, new_b)
+        flat_c = (
+            new_assign + np.arange(t)[:, None] * k_clusters
+        ).reshape(-1)                                     # (T·m,) row keys
+        order = np.argsort(flat_c, kind="stable")
+        sorted_c = flat_c[order]
+        starts = np.r_[0, np.flatnonzero(np.diff(sorted_c)) + 1]
+        group_len = np.diff(np.r_[starts, sorted_c.size])
+        rank = np.arange(sorted_c.size) - np.repeat(starts, group_len)
+        free_cols = np.argsort(rows != n_new, axis=1, kind="stable")
+        rows[sorted_c, free_cols[sorted_c, rank]] = np.tile(ids_new, t)[order]
         counts += add_counts
 
         self.docs = jnp.concatenate([self.docs, new_docs])
@@ -394,14 +432,16 @@ class ClusterPruneIndex:
     def ensure_bucket_major(self) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-major view for the fused backend: ``((T*K, B, D) data,
         (T*K, B) ids with -1 padding)``. Materialises the data tensor if the
-        build deferred it; the flattened view is cached so the serving hot
-        path pays no per-query layout work."""
+        build deferred it — in ``pack_dtype`` storage precision when the
+        index carries one (bf16 halves the packed HBM bytes) — and caches
+        the flattened view so the serving hot path pays no per-query layout
+        work."""
         cached = getattr(self, "_bucket_major_flat", None)
         if cached is not None:
             return cached
         if self.bucket_data is None:
             self.bucket_data = pack_buckets_major(
-                self.docs, self.buckets, self.n_docs
+                self.docs, self.buckets, self.n_docs, dtype=self.pack_dtype
             )
         t, k_clusters, b, d = self.bucket_data.shape
         ids = jnp.where(self.buckets < self.n_docs, self.buckets, -1)
@@ -443,6 +483,7 @@ class ClusterPruneIndex:
                 else np.zeros((0,), bool)
             ),
             n_mutations=np.int64(self.n_mutations),
+            pack_dtype=np.str_(self.pack_dtype or ""),
         )
 
     @classmethod
@@ -475,6 +516,10 @@ class ClusterPruneIndex:
             removed=removed if removed.size else None,
             n_mutations=(
                 int(z["n_mutations"]) if "n_mutations" in z.files else 0
+            ),
+            pack_dtype=(
+                str(z["pack_dtype"]) or None
+                if "pack_dtype" in z.files else None
             ),
         )
 

@@ -3,15 +3,40 @@
 TPU adaptation of "visit cluster = walk its posting list" (DESIGN.md §4): the
 corpus is stored **bucket-major** as a padded ``(K, B, D)`` tensor, so a probe
 is a *contiguous block read* selected by a scalar-prefetched probe list — no
-row gather. Each grid step scores one whole bucket against one query on the
-MXU and merges into that query's running top-k in VMEM.
+row gather.
 
-Grid: ``(nq, P)`` — probe minor, so the (1, K) output block of a query stays
-VMEM-resident across its probe sweep. ``probes`` is ``(nq, P)`` because every
-query probes different clusters (the essence of cluster pruning).
+Two generations of the kernel live here:
 
-VMEM per step: ``B·D + D + 2·(K+B)`` floats — bucket pad B and D choose the
-block budget; at B = 512, D = 4096 that is ~8 MB.
+``bucket_score_kernel`` (v1)
+    Grid ``(nq, P)`` with a ``(1, D)`` query block — every step is a
+    ``(1, D)×(D, B)`` matvec. Simple, but the MXU runs one row of its 128
+    and a 64-query batch re-reads every shared bucket from HBM 64 times.
+    Kept as the single-query baseline and for the kernels benchmark.
+
+``bucket_score_tiled_kernel`` (v2)
+    Grid ``(nq/QT, S)`` with a ``(QT, D)`` query block: each step scores one
+    DMA'd bucket against a whole *query tile* as a ``(QT, D)×(D, B)`` MXU
+    matmul with fp32 accumulation (``preferred_element_type`` — the bucket
+    tensor may be stored bf16). ``S`` indexes a per-tile **deduplicated
+    probe schedule** built engine-side (see
+    :func:`repro.kernels.bucket_score.ops.build_probe_schedule`): the union
+    of the tile's flat probe lists, each shared bucket appearing ONCE, so a
+    bucket probed by many queries of the tile is read from HBM once per
+    tile instead of once per query. A scalar-prefetched schedule selects
+    the block; a per-step ``(QT,)`` membership mask keeps each query's
+    candidate set exactly its own probed buckets.
+
+Both kernels keep running top-k accumulators in VMEM (``(1, k_pad)`` /
+``(QT, k_pad)``) and suppress duplicate ids across the T overlapping
+clusterings by masking candidates already present in the accumulator. That
+dedup is sound because ``jax.lax.top_k`` breaks ties toward lower indices
+and the accumulator occupies the low indices of the merge concatenation:
+a candidate whose score was masked to ``-inf`` can never displace an
+``(-inf, -1)`` accumulator slot, so the accumulator never holds a real id
+at ``-inf`` — and therefore never masks a live candidate it did not beat.
+
+VMEM per v2 step: ``QT·D + B·D + QT·B + 2·QT·k_pad`` words — QT is sized
+from this budget by :func:`repro.kernels.bucket_score.ops.pick_query_tile`.
 """
 
 from __future__ import annotations
@@ -20,7 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["bucket_score_kernel"]
+__all__ = ["bucket_score_kernel", "bucket_score_tiled_kernel"]
 
 
 def bucket_score_kernel(
@@ -54,5 +79,51 @@ def bucket_score_kernel(
     cat_s = jnp.concatenate([s_out[...], s], axis=-1)
     cat_i = jnp.concatenate([i_out[...], ids], axis=-1)
     top_s, pos = jax.lax.top_k(cat_s, k)
+    s_out[...] = top_s
+    i_out[...] = jnp.take_along_axis(cat_i, pos, axis=-1)
+
+
+def bucket_score_tiled_kernel(
+    sched_ref,    # (n_tiles, S) int32 — scalar-prefetched dedup'd schedules
+    q_ref,        # (QT, D) VMEM — this tile's queries (fp32)
+    bd_ref,       # (1, B, D) VMEM — the scheduled bucket (fp32 or bf16)
+    bi_ref,       # (1, B) int32 VMEM — its global doc ids (-1 pad)
+    mb_ref,       # (1, 1, QT) int32 VMEM — which tile queries probe it
+    ex_ref,       # (QT, 1) int32 — per-query excluded doc id
+    s_out,        # (QT, k_pad) VMEM accumulator
+    i_out,        # (QT, k_pad) VMEM accumulator
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        s_out[...] = jnp.full_like(s_out, -jnp.inf)
+        i_out[...] = jnp.full_like(i_out, -1)
+
+    data = bd_ref[0]                                   # (B, D)
+    ids = bi_ref[...]                                  # (1, B)
+    q = q_ref[...]                                     # (QT, D)
+    # Half-precision pack: feed the MXU the storage dtype on both sides and
+    # accumulate fp32 (preferred_element_type) — bandwidth halves, the
+    # reduction stays full precision.
+    if data.dtype != q.dtype:
+        q = q.astype(data.dtype)
+    s = jnp.dot(q, data.T, preferred_element_type=jnp.float32)  # (QT, B)
+    member = mb_ref[0, 0, :][:, None] != 0             # (QT, 1)
+    s = jnp.where(member, s, -jnp.inf)                 # not this query's probe
+    s = jnp.where(ids >= 0, s, -jnp.inf)               # bucket padding
+    s = jnp.where(ids == ex_ref[...], -jnp.inf, s)     # per-query exclusion
+    # Overlap dedup (multi-clustering): drop ids already in the running
+    # top-k, per query of the tile.
+    dup = jnp.any(
+        ids[0][None, :, None] == i_out[...][:, None, :], axis=-1
+    )                                                  # (QT, B)
+    s = jnp.where(dup, -jnp.inf, s)
+
+    k_pad = s_out.shape[-1]
+    ids_b = jnp.broadcast_to(ids, s.shape)             # (QT, B)
+    cat_s = jnp.concatenate([s_out[...], s], axis=-1)
+    cat_i = jnp.concatenate([i_out[...], ids_b], axis=-1)
+    top_s, pos = jax.lax.top_k(cat_s, k_pad)
     s_out[...] = top_s
     i_out[...] = jnp.take_along_axis(cat_i, pos, axis=-1)

@@ -1,4 +1,18 @@
-"""Jit'd public wrapper for the bucket gather-score-merge kernel."""
+"""Jit'd public wrappers for the bucket gather-score-merge kernels.
+
+``bucket_score``
+    v1 per-query path: grid ``(nq, P)``, one ``(1, D)×(D, B)`` matvec per
+    step. Kept as the baseline and for single-query microbenchmarks.
+``bucket_score_tiled``
+    v2 query-tiled path: grid ``(nq/QT, S)`` over a per-tile deduplicated
+    probe *schedule* (:func:`build_probe_schedule`), one ``(QT, D)×(D, B)``
+    MXU matmul per step, fp32 accumulation over optionally bf16 bucket
+    storage. This is what :class:`repro.core.engine.FusedEngine` serves.
+
+``pick_query_tile`` sizes QT from the per-step VMEM working set
+``QT·D + B·D + QT·B + 2·QT·k_pad`` words; ``pack_bucket_major`` materialises
+the bucket-major tensor (optionally in a reduced storage dtype).
+"""
 
 from __future__ import annotations
 
@@ -6,13 +20,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..common import pad_to, use_interpret
-from .kernel import bucket_score_kernel
+from .kernel import bucket_score_kernel, bucket_score_tiled_kernel
 
-__all__ = ["bucket_score"]
+__all__ = [
+    "bucket_score",
+    "bucket_score_tiled",
+    "build_probe_schedule",
+    "pick_query_tile",
+    "pack_bucket_major",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
@@ -26,7 +47,8 @@ def bucket_score(
     exclude: jnp.ndarray | None = None,
     interpret: bool | None = None,
 ):
-    """Cluster-prune inner loop: ``(nq, k)`` scores + ids over probed buckets.
+    """Cluster-prune inner loop (v1): ``(nq, k)`` scores + ids, one query
+    per grid row.
 
     The probe list rides in as a scalar-prefetch operand, so the bucket block
     for step ``(q, p)`` is DMA'd ahead of the matmul of step ``(q, p-1)`` —
@@ -73,11 +95,166 @@ def bucket_score(
     return s[:, :k], i[:, :k]
 
 
-def pack_bucket_major(docs, buckets):
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def bucket_score_tiled(
+    queries: jnp.ndarray,        # (nq, D) fp32
+    bucket_data: jnp.ndarray,    # (K, B, D) bucket-major corpus (fp32/bf16)
+    bucket_ids: jnp.ndarray,     # (K, B) int32, -1 padding
+    schedule: jnp.ndarray,       # (n_tiles, S) int32 dedup'd bucket schedule
+    member: jnp.ndarray,         # (n_tiles, S, QT) int32 membership mask
+    *,
+    k: int,
+    exclude: jnp.ndarray | None = None,
+    interpret: bool | None = None,
+):
+    """Cluster-prune inner loop (v2): query-tiled ``(nq, k)`` scores + ids.
+
+    ``schedule`` and ``member`` come from :func:`build_probe_schedule`:
+    row ``t`` of the schedule is the deduplicated union of the flat probe
+    lists of queries ``[t·QT, (t+1)·QT)``, and ``member[t, s, q]`` says
+    whether tile query ``q`` actually probes ``schedule[t, s]``. Each grid
+    step DMAs ONE bucket block and scores it against the whole tile as a
+    ``(QT, D)×(D, B)`` MXU matmul — a bucket shared by many queries of the
+    tile is read from HBM once per tile instead of once per query.
+
+    Queries, exclude, and outputs are ragged-tail padded to ``n_tiles·QT``
+    internally; the pad rows have an all-zero membership mask, so they score
+    nothing and come back as ``(-inf, -1)`` before being sliced off.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    nq, d = queries.shape
+    _, b, _ = bucket_data.shape
+    n_tiles, s_len = schedule.shape
+    qt = member.shape[-1]
+    if n_tiles * qt < nq:
+        raise ValueError(
+            f"schedule covers {n_tiles}x{qt} query rows, batch has {nq}"
+        )
+    if exclude is None:
+        exclude = jnp.full((nq,), -1, jnp.int32)
+    pad = n_tiles * qt - nq
+    qp = jnp.pad(queries, ((0, pad), (0, 0)))
+    ep = jnp.pad(exclude.astype(jnp.int32), (0, pad), constant_values=-1)
+    k_pad = min(pad_to(k, 8), b * s_len)
+
+    grid = (n_tiles, s_len)
+    s, i = pl.pallas_call(
+        bucket_score_tiled_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((qt, d), lambda t, ss, sc: (t, 0)),
+                pl.BlockSpec((1, b, d), lambda t, ss, sc: (sc[t, ss], 0, 0)),
+                pl.BlockSpec((1, b), lambda t, ss, sc: (sc[t, ss], 0)),
+                pl.BlockSpec((1, 1, qt), lambda t, ss, sc: (t, ss, 0)),
+                pl.BlockSpec((qt, 1), lambda t, ss, sc: (t, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((qt, k_pad), lambda t, ss, sc: (t, 0)),
+                pl.BlockSpec((qt, k_pad), lambda t, ss, sc: (t, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles * qt, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles * qt, k_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        schedule.astype(jnp.int32),
+        qp,
+        bucket_data,
+        bucket_ids.astype(jnp.int32),
+        member.astype(jnp.int32),
+        ep[:, None],
+    )
+    return s[:nq, :k], i[:nq, :k]
+
+
+# Per-step VMEM working set the tiled kernel may occupy (half of a 16 MB
+# VMEM core, leaving room for double-buffered DMA of the next bucket block).
+TILE_VMEM_BUDGET = 8 * 2**20
+
+
+def pick_query_tile(
+    d: int,
+    b: int,
+    *,
+    k_pad: int = 64,
+    budget_bytes: int = TILE_VMEM_BUDGET,
+    max_tile: int = 128,
+) -> int:
+    """Size the query tile QT from the v2 kernel's VMEM working set.
+
+    One grid step holds ``QT·D`` query words, the ``B·D`` bucket block, the
+    ``(QT, B)`` score tile and two ``(QT, k_pad)`` accumulators (fp32
+    words): solve ``QT·D + B·D + QT·B + 2·QT·k_pad <= budget/4`` for QT,
+    then clamp to ``[8, max_tile]`` and round down to a sublane multiple of
+    8. A bucket block larger than the whole budget still yields the minimum
+    tile (the kernel remains correct; residency just degrades).
+    """
+    free = budget_bytes // 4 - b * d
+    per_query = d + b + 2 * k_pad
+    qt = free // per_query if free > 0 else 0
+    qt = max(8, min(max_tile, (qt // 8) * 8))
+    return int(qt)
+
+
+def build_probe_schedule(
+    probes: np.ndarray, query_tile: int, *, pad_multiple: int = 8
+) -> tuple[np.ndarray, np.ndarray]:
+    """Probe-dedup scheduler: per-query flat probe lists -> per-tile schedule.
+
+    ``probes`` is the ``(nq, P)`` flat (``t·K + cluster``) probe tensor the
+    engine navigates to (entries < 0 are ignored — used for ragged-tail
+    query padding). Queries are tiled in groups of ``query_tile``; each
+    tile's schedule row is the **deduplicated union** of its members' probe
+    lists, so a bucket probed by several queries of the tile appears once —
+    the HBM block read amortises across the tile. Under skewed probe
+    distributions (popular clusters), ``S`` collapses well below
+    ``QT·P``.
+
+    Returns ``(schedule (n_tiles, S) int32, member (n_tiles, S, QT) int32)``
+    with ``S`` the max per-tile unique count rounded up to ``pad_multiple``
+    (bounds kernel re-tracing across batches). Padded schedule slots point
+    at bucket 0 with an all-zero membership mask; padded query rows
+    (``n_tiles·QT > nq``) have zero membership everywhere.
+
+    Host-side numpy on purpose: schedules depend on the probe *values*, so
+    building them on device would force S to the static worst case and
+    erase the dedup win.
+    """
+    probes = np.asarray(probes)
+    nq, _ = probes.shape
+    qt = int(query_tile)
+    n_tiles = max(1, -(-nq // qt))
+    pad = n_tiles * qt - nq
+    pp = np.pad(probes, ((0, pad), (0, 0)), constant_values=-1)
+    tiles = pp.reshape(n_tiles, qt, -1)
+    uniq = [np.unique(t[t >= 0]) for t in tiles]
+    s_len = pad_to(max(1, max(u.size for u in uniq)), pad_multiple)
+    sched = np.zeros((n_tiles, s_len), np.int32)
+    member = np.zeros((n_tiles, s_len, qt), np.int32)
+    for ti, u in enumerate(uniq):
+        sched[ti, : u.size] = u
+        member[ti, : u.size] = np.any(
+            tiles[ti][None, :, :] == u[:, None, None], axis=-1
+        )
+    return sched, member
+
+
+def pack_bucket_major(docs, buckets, *, dtype=None):
     """Host helper: (n, D) corpus + (K, B) id pack -> (K, B, D) bucket-major.
 
     Padded slots point at row 0 but carry id -1, so kernels mask them.
+    ``dtype`` (e.g. ``jnp.bfloat16``) stores the bucket-major tensor in a
+    reduced precision — half the HBM bytes and half the bandwidth the
+    scoring matmul has to hide; the kernels accumulate fp32 regardless
+    (``preferred_element_type``), and navigation keeps the fp32 leaders.
     """
     safe = jnp.where(buckets >= 0, buckets, 0)
     data = docs[safe]                                  # (K, B, D)
+    if dtype is not None:
+        data = data.astype(dtype)
     return data, jnp.where(buckets >= 0, buckets, -1)

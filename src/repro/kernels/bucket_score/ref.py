@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the bucket gather-score-merge kernel."""
+"""Pure-jnp oracle for the bucket gather-score-merge kernels.
+
+One oracle serves both kernel generations: the v2 tiled kernel's
+probe-dedup schedule changes *which HBM reads happen*, never which
+candidates a query scores, so ``bucket_score_tiled`` over
+``build_probe_schedule(probes, QT)`` must match ``bucket_score_ref`` on the
+same per-query ``probes`` exactly (fp32 pack) or to bf16 tolerance.
+"""
 
 from __future__ import annotations
 

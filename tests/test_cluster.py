@@ -28,6 +28,8 @@ from repro.core import (
     ClusterPruneIndex,
     LADDER_DRIFT_THRESHOLD,
     assign_refine,
+    assign_to_centers,
+    assign_to_centers_multi,
     available_clusterers,
     brute_force_topk,
     brute_force_bottomk,
@@ -162,6 +164,40 @@ def built_index(random_corpus):
     idx = ClusterPruneIndex.build(docs[:1000], spec, 16, n_clusterings=3,
                                   method="fpf", key=jax.random.PRNGKey(0))
     return idx, docs, spec
+
+
+def test_assign_multi_matches_per_clustering_loop(built_index):
+    """The fused (T·K) assignment matmul must reproduce a per-T loop of the
+    shared assignment primitive exactly — batched ingest may not change
+    where a document lands."""
+    idx, docs, spec = built_index
+    x = docs[1000:1100]
+    multi_a, multi_s = assign_to_centers_multi(x, idx.leaders, chunk=32)
+    for ti in range(idx.leaders.shape[0]):
+        a, s = assign_to_centers(x, idx.leaders[ti], chunk=32)
+        assert np.array_equal(np.asarray(multi_a[ti]), np.asarray(a)), ti
+        np.testing.assert_allclose(
+            np.asarray(multi_s[ti]), np.asarray(s), atol=1e-6
+        )
+
+
+def test_batched_ingest_matches_one_by_one(built_index):
+    """One 100-doc add == 100 single-doc adds: same buckets, same counts
+    (the single host-side scatter fills free slots deterministically)."""
+    import copy
+
+    idx, docs, spec = built_index
+    idx2 = copy.deepcopy(idx)
+    idx.add_documents(docs[1000:1100])
+    for i in range(1000, 1100):
+        idx2.add_documents(docs[i:i + 1])
+    assert np.array_equal(np.asarray(idx.counts), np.asarray(idx2.counts))
+    assert np.array_equal(np.asarray(idx.assign), np.asarray(idx2.assign))
+    # bucket membership agrees as sets per bucket (insertion order within
+    # a bucket's free slots is an implementation detail)
+    b1, b2 = np.asarray(idx.buckets), np.asarray(idx2.buckets)
+    assert b1.shape == b2.shape
+    assert np.array_equal(np.sort(b1, axis=-1), np.sort(b2, axis=-1))
 
 
 def test_add_documents_ids_and_state(built_index):

@@ -150,6 +150,138 @@ def test_registry_and_autopick():
         get_engine(object(), "no-such-backend")
 
 
+# --------------------------------------------------------- v2 query tiling
+# The fused backend serves through the query-tiled bucket_score v2 kernel:
+# queries are grouped into QT-row tiles, each tile gets a deduplicated probe
+# schedule, and ragged batch tails are padded to the tile and sliced off.
+# These tests pin the tiling edges with a KNOWN tile size.
+QT = 8
+
+
+@pytest.mark.parametrize("nq", [1, QT - 1, QT, QT + 1, 3 * QT + 5])
+def test_tiled_parity_ragged_batches(built_index, engine_corpus, nq):
+    """Fused-vs-reference parity at every ragged-tail shape around the
+    query tile, with a per-query exclude (self-exclusion pattern)."""
+    docs, _ = engine_corpus
+    qw = docs[100:100 + nq]
+    ex = jnp.arange(100, 100 + nq, dtype=jnp.int32)
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    out = get_engine(built_index, "fused", query_tile=QT).search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    _assert_parity(ref, out, f"fused-tiled nq={nq}")
+
+
+def test_tiled_shared_bucket_dedup(built_index, engine_corpus):
+    """A tile of IDENTICAL queries probes identical buckets: the schedule
+    collapses to one copy of each bucket, and the in-tile cross-clustering
+    dedup must still return each doc id once per query — same answer as
+    the per-query reference."""
+    docs, _ = engine_corpus
+    qw = jnp.tile(docs[42:43], (QT, 1))                  # one shared tile
+    # per-query exclude differs across the tile, so the shared schedule
+    # must not leak one query's exclusion into its neighbours
+    ex = jnp.asarray([42, -1] * (QT // 2), jnp.int32)
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=9, k=10, exclude=ex
+    )
+    out = get_engine(built_index, "fused", query_tile=QT).search(
+        qw, probes=9, k=10, exclude=ex
+    )
+    _assert_parity(ref, out, "fused-shared-tile")
+    # dedup inside the tile: no duplicate ids within any query's top-k
+    ids = np.asarray(out[1])
+    for row in ids:
+        live = row[row >= 0]
+        assert len(set(live.tolist())) == len(live)
+
+
+def test_tiled_schedule_is_deduplicated(built_index, engine_corpus):
+    """The engine-side scheduler reads each shared bucket once per tile:
+    identical queries => schedule length == one query's probe count, not
+    QT times it."""
+    from repro.kernels.bucket_score.ops import build_probe_schedule
+
+    docs, _ = engine_corpus
+    eng = get_engine(built_index, "fused", query_tile=QT)
+    nav = jnp.tile(docs[42:43], (QT, 1))
+    flat = eng._flat_probes(nav, eng._probes_t(9))        # (QT, 9)
+    sched, member = build_probe_schedule(np.asarray(flat), QT)
+    live = member[0].any(axis=1)
+    assert sched.shape[0] == 1
+    assert live.sum() == 9                                # dedup'd union
+    assert member[0][live].all()                          # every query member
+
+
+def test_engine_cache_keyed_by_opts(built_index):
+    """Variant engines (sweep qchunks, tile overrides) are cached per opts
+    — no per-call reconstruction — while distinct opts stay distinct."""
+    e1 = get_engine(built_index, "reference", qchunk=4)
+    e2 = get_engine(built_index, "reference", qchunk=4)
+    e3 = get_engine(built_index, "reference", qchunk=2)
+    assert e1 is e2 and e1 is not e3
+    f1 = get_engine(built_index, "fused", query_tile=QT)
+    f2 = get_engine(built_index, "fused", query_tile=QT)
+    assert f1 is f2 and f1 is not get_engine(built_index, "fused")
+
+
+# ------------------------------------------------------------- bf16 pack
+@pytest.fixture(scope="module")
+def bf16_index(built_index):
+    """The SAME clustering with half-precision bucket-major storage (the
+    repack is a pure layout/precision transform — clustering, leaders and
+    buckets are shared, so probing is identical)."""
+    import dataclasses
+
+    return dataclasses.replace(
+        built_index, bucket_data=None, pack_dtype="bfloat16"
+    )
+
+
+def test_bf16_pack_halves_bucket_major_bytes(built_index, bf16_index):
+    d32, i32 = built_index.ensure_bucket_major()
+    d16, i16 = bf16_index.ensure_bucket_major()
+    assert d16.dtype == jnp.bfloat16
+    assert d16.nbytes * 2 == d32.nbytes
+    assert np.array_equal(np.asarray(i16), np.asarray(i32))
+
+
+@pytest.mark.parametrize("nq", [1, QT - 1, 2 * QT + 3])
+def test_bf16_pack_parity(built_index, bf16_index, engine_corpus, nq):
+    """bf16 storage: EXACT id parity against the reference engine scoring
+    the same bf16-quantised values (storage precision is the only degree
+    of freedom), score parity to bf16 tolerance and identical n_scored
+    against the full-precision reference (navigation keeps fp32 leaders)."""
+    import dataclasses
+
+    docs, _ = engine_corpus
+    qw = docs[200:200 + nq]
+    ex = jnp.arange(200, 200 + nq, dtype=jnp.int32)
+    out = get_engine(bf16_index, "fused", query_tile=QT).search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    # fp32 reference: scores drift only by storage quantisation
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref[0]), atol=2e-2
+    )
+    assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))
+    # quantised twin: reference engine over bf16-rounded docs and queries
+    # reproduces the kernel's candidate scores -> ids must match EXACTLY
+    quant = lambda a: a.astype(jnp.bfloat16).astype(jnp.float32)
+    twin = dataclasses.replace(built_index, docs=quant(built_index.docs))
+    tref = get_engine(twin, "reference").search(
+        quant(qw), probes=6, k=10, exclude=ex, nav_query=qw
+    )
+    assert np.array_equal(np.asarray(out[1]), np.asarray(tref[1])), (
+        "bf16 fused ids diverge from the bf16-quantised reference"
+    )
+
+
 def test_lazy_bucket_major(engine_corpus):
     """A build that defers packing still serves fused via lazy conversion."""
     docs, spec = engine_corpus

@@ -6,10 +6,11 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
-    bucket_score, bucket_score_ref,
+    bucket_score, bucket_score_ref, bucket_score_tiled,
+    build_probe_schedule,
     embed_bag, embed_bag_ref,
     fpf_centers_fused, fpf_iter, fpf_iter_ref,
-    pack_bucket_major,
+    pack_bucket_major, pick_query_tile,
     topk_score, topk_score_ref,
 )
 from repro.core import fpf_centers
@@ -48,6 +49,87 @@ def test_bucket_score_sweep(K, B, D, P, k):
     rs, ri = bucket_score_ref(q, bd, bi, probes, k)
     np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5)
     assert np.array_equal(np.sort(np.asarray(i)), np.sort(np.asarray(ri)))
+
+
+@pytest.mark.parametrize("K,B,D,P,k", [
+    (8, 16, 32, 2, 4), (12, 24, 64, 3, 8), (20, 40, 128, 6, 16),
+])
+@pytest.mark.parametrize("nq", [1, 7, 8, 9, 29])
+def test_bucket_score_tiled_sweep(K, B, D, P, k, nq):
+    """v2 tiled kernel over a dedup'd schedule == the v1 oracle on the same
+    per-query probe lists, at every ragged batch shape."""
+    ks = jax.random.split(jax.random.PRNGKey(K * B + nq), 5)
+    bd = jax.random.normal(ks[0], (K, B, D))
+    bi = jax.random.permutation(ks[1], K * B).reshape(K, B).astype(jnp.int32)
+    bi = jnp.where(jax.random.uniform(ks[2], (K, B)) < 0.25, -1, bi)
+    q = jax.random.normal(ks[3], (nq, D))
+    probes = jax.random.randint(ks[4], (nq, P), 0, K)
+    ex = jnp.where(
+        jnp.arange(nq) % 2 == 0, jnp.abs(bi[0, 0]), -1
+    ).astype(jnp.int32)
+    sched, member = build_probe_schedule(np.asarray(probes), 8)
+    s, i = bucket_score_tiled(
+        q, bd, bi, jnp.asarray(sched), jnp.asarray(member), k=k, exclude=ex
+    )
+    rs, ri = bucket_score_ref(q, bd, bi, probes, k, exclude=ex)
+    # rtol: the tiled (QT, D)x(D, B) matmul accumulates in a different
+    # order than the oracle's einsum — fp32 reassociation noise only
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(rs), atol=1e-5, rtol=1e-6
+    )
+    assert np.array_equal(np.sort(np.asarray(i)), np.sort(np.asarray(ri)))
+
+
+def test_build_probe_schedule_dedups_shared_buckets():
+    """A bucket probed by several queries of a tile appears ONCE in the
+    tile's schedule (the HBM read amortises), membership reproduces each
+    query's probe set exactly, and padded rows probe nothing."""
+    probes = np.asarray([
+        [3, 7, 1],
+        [7, 3, 2],
+        [3, 7, 1],
+        [9, 3, 7],
+        [5, 0, 4],
+    ])
+    sched, member = build_probe_schedule(probes, 4)
+    assert sched.shape[0] == 2 and member.shape == (2, sched.shape[1], 4)
+    for ti in range(2):
+        live = member[ti].any(axis=1)
+        row = sched[ti][live]
+        assert len(set(row.tolist())) == len(row)         # dedup'd
+        for q in range(4):
+            gi = ti * 4 + q
+            want = set(probes[gi].tolist()) if gi < len(probes) else set()
+            got = set(sched[ti][member[ti, :, q] != 0].tolist())
+            assert got == want, (ti, q)
+    # tile 0 probes {3, 7} three times over -> one schedule slot each
+    assert np.sum(sched[0][member[0].any(axis=1)] == 3) == 1
+    assert np.sum(sched[0][member[0].any(axis=1)] == 7) == 1
+
+
+def test_pick_query_tile_respects_vmem_budget():
+    """QT solves QT·D + B·D + QT·B + 2·QT·k_pad <= budget words, clamped to
+    [8, max_tile] and a sublane multiple of 8."""
+    qt = pick_query_tile(512, 128, k_pad=64, budget_bytes=2**20)
+    words = qt * 512 + 128 * 512 + qt * 128 + 2 * qt * 64
+    assert words * 4 <= 2**20 and qt % 8 == 0 and qt >= 8
+    # a bucket block that alone overflows the budget still yields the floor
+    assert pick_query_tile(4096, 4096, budget_bytes=2**20) == 8
+    assert pick_query_tile(64, 8, max_tile=32) == 32
+
+
+def test_pack_bucket_major_bf16_halves_bytes():
+    """The bf16 pack stores the SAME layout at half the HBM bytes."""
+    docs = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    buckets = jnp.arange(64, dtype=jnp.int32).reshape(8, 8)
+    d32, i32 = pack_bucket_major(docs, buckets)
+    d16, i16 = pack_bucket_major(docs, buckets, dtype=jnp.bfloat16)
+    assert d16.dtype == jnp.bfloat16 and d32.dtype == jnp.float32
+    assert d16.nbytes * 2 == d32.nbytes
+    assert np.array_equal(np.asarray(i16), np.asarray(i32))
+    np.testing.assert_allclose(
+        np.asarray(d16, np.float32), np.asarray(d32), atol=1e-2
+    )
 
 
 def test_bucket_score_dedups_across_clusterings():

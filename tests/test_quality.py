@@ -104,6 +104,33 @@ def test_quality_floors(quality_setup, backend):
 
 
 @pytest.mark.slow
+def test_quality_floors_bf16_pack(quality_setup):
+    """Half-precision bucket-major storage must stay above the SAME CR/NAG
+    floors as fp32: bf16 quantises stored vectors (~1e-2 score noise) but
+    may not change which documents the fused backend retrieves enough to
+    dent output quality. Probing is untouched (fp32 leaders)."""
+    import dataclasses
+
+    index, qids, cells = quality_setup
+    bf16 = dataclasses.replace(index, bucket_data=None, pack_dtype="bfloat16")
+    data, _ = bf16.ensure_bucket_major()
+    assert data.dtype == jnp.bfloat16
+    engine = get_engine(bf16, "fused")
+    for probes, cr_floor, nag_floor in QUALITY_FLOORS:
+        for wi, (qw, gt_s, gt_i, far_s) in enumerate(cells):
+            s, ids, _ = engine.search(qw, probes=probes, k=K_NN, exclude=qids)
+            cr = float(jnp.mean(competitive_recall(ids, gt_i)))
+            nag = float(jnp.mean(
+                normalized_aggregate_goodness(s, gt_s, far_s)))
+            assert cr >= cr_floor, (
+                f"bf16 fused, probes={probes}, weight set {wi}: "
+                f"CR {cr:.3f} fell below the {cr_floor} floor")
+            assert nag >= nag_floor, (
+                f"bf16 fused, probes={probes}, weight set {wi}: "
+                f"NAG {nag:.4f} fell below the {nag_floor} floor")
+
+
+@pytest.mark.slow
 def test_quality_improves_with_probes(quality_setup):
     """Sanity on the floors' premise: the recall-vs-probes curve the planner
     calibrates against is increasing on this corpus."""
