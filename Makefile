@@ -1,4 +1,4 @@
-.PHONY: test test-fast serve bench bench-preprocess
+.PHONY: test test-fast serve bench bench-preprocess bench-throughput
 
 # Tier-1 verify (ROADMAP.md) + serving/benchmark smokes (incl. add/remove)
 test:
@@ -18,3 +18,8 @@ bench:
 # (both FPF backends) + the paper's three Table-1 index builds
 bench-preprocess:
 	PYTHONPATH=src python -m benchmarks.table1_preprocessing --scale quick
+
+# Serving QPS vs batch size: every backend, fused swept over the
+# fp32/bf16/int8 bucket-major packs (labelled entries; interpret off-TPU)
+bench-throughput:
+	PYTHONPATH=src python -m benchmarks.throughput --scale quick

@@ -62,11 +62,10 @@ def main() -> None:
             f"{w}/{a}": {"recall": rec, "nag": nag}
             for (w, a), (rec, nag) in table2.items()
         },
-        # serving throughput: backend -> {batch size -> QPS}
-        "throughput": {
-            name: {str(bs): qps for bs, qps in rows.items()}
-            for name, rows in thr.items()
-        },
+        # serving throughput: fully labelled entries (backend, batch,
+        # pack_dtype, query_tile, rescore -> qps / ms_per_query), one per
+        # measured configuration — the fused backend sweeps fp32/bf16/int8
+        "throughput": thr,
     })
     print(f"\n# benchmarks done in {time.time() - t0:.1f}s (scale={scale})")
 

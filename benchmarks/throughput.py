@@ -1,4 +1,4 @@
-"""Serving throughput: QPS vs batch size, per search backend.
+"""Serving throughput: QPS vs batch size, per search backend and pack dtype.
 
 The paper reports per-query latency (Fig 1); a serving system's headline is
 *throughput* — how many queries per second one host sustains when requests
@@ -6,9 +6,16 @@ arrive in batches. This is exactly the axis the query-tiled ``bucket_score``
 v2 kernel targets: a batch shares one probe-dedup schedule per query tile,
 so popular buckets are read from HBM once per tile instead of once per
 query, and each block read feeds a ``(QT, D)×(D, B)`` MXU matmul instead of
-a matvec. Off-TPU the fused backend runs the Pallas kernel in interpret
-mode — its numbers there are a correctness smoke, not a speed claim (the
-reference backend is the honest CPU row).
+a matvec. Quantised packs (bf16 halves, int8 quarters the packed bytes)
+shrink the per-bucket DMA and buy a larger query tile out of the same VMEM
+budget, so their rows should dominate fp32 at large batch. Off-TPU the
+fused backend runs the Pallas kernel in interpret mode — its numbers there
+are a correctness smoke, not a speed claim (the reference backend is the
+honest CPU row).
+
+Every emitted entry is fully labelled (backend, batch, pack_dtype,
+query_tile, rescore) so BENCH_query.json rows stay comparable across runs
+without guessing which configuration produced them.
 
 Measured at the engine seam (one ``engine.search`` call per batch — the
 same call ``Retriever._search_batch`` issues per execution-shape group), so
@@ -17,12 +24,15 @@ the numbers isolate the scoring mechanism from response assembly.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ClusterPruneIndex, available_backends, get_engine
 from repro.data import CorpusConfig, make_corpus
+from repro.kernels import pick_query_tile
 
 from .common import bench_sizes, std_parser, timed
 
@@ -31,8 +41,28 @@ PROBES = 12
 BATCH_SIZES = (1, 8, 64)
 
 
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _query_tile_of(index, k: int) -> int | None:
+    """The tile the fused engine will pick for this index/k — None when the
+    bucket-major pack is absent (non-fused backends don't tile)."""
+    if index.bucket_data is None:
+        return None
+    t, kc, b, d = index.bucket_data.shape
+    return pick_query_tile(
+        d, b, k_pad=_pad_to(k, 8),
+        pack_itemsize=index.bucket_data.dtype.itemsize,
+    )
+
+
 def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
-        backends=None, pack_dtype=None):
+        backends=None, pack_dtypes=(None, "bfloat16", "int8"),
+        rescore=None):
+    """Returns a list of labelled throughput entries. The fused backend is
+    measured once per pack dtype (re-packing the SAME index, so clustering
+    is held fixed); reference/sharded score fp32 docs and get one row."""
     sz = bench_sizes(scale)
     docs_np, spec, _ = make_corpus(CorpusConfig(
         n_docs=sz["n_docs"], field_dims=sz["field_dims"],
@@ -43,47 +73,75 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
     docs = jnp.asarray(docs_np)
     index = ClusterPruneIndex.build(
         docs, spec, sz["k_clusters"], n_clusterings=3, method="fpf",
-        key=jax.random.PRNGKey(seed), pack_major=True, pack_dtype=pack_dtype,
+        key=jax.random.PRNGKey(seed), pack_major=True,
     )
     rng = np.random.default_rng(seed)
     if backends is None:
         backends = available_backends()
 
-    dtype = pack_dtype or "float32"
     print(f"\n# Throughput — QPS vs batch size (n={sz['n_docs']}, "
-          f"probes={PROBES}, k={K_NN}, pack={dtype}, "
+          f"probes={PROBES}, k={K_NN}, rescore={rescore}, "
           f"platform={jax.default_backend()}; fused is interpret-mode "
           f"off-TPU)")
-    print("backend,batch,qps,ms_per_query")
-    out = {}
+    print("backend,pack_dtype,query_tile,batch,qps,ms_per_query")
+    entries = []
     for name in backends:
-        try:
-            engine = get_engine(index, name)
-        except Exception as e:          # e.g. sharded divisibility
-            print(f"# {name} skipped: {e}")
-            continue
-        rows = {}
-        for bs in batch_sizes:
-            qids = rng.choice(sz["n_docs"], bs, replace=False)
-            qw = docs[jnp.asarray(qids)]
-            ex = jnp.asarray(qids, jnp.int32)
-            t, _ = timed(
-                lambda e=engine, q=qw, x=ex: e.search(
-                    q, probes=PROBES, k=K_NN, exclude=x
+        dtypes = pack_dtypes if name == "fused" else (None,)
+        for pd in dtypes:
+            if pd is None:
+                idx = index
+            else:
+                idx = dataclasses.replace(
+                    index, bucket_data=None, bucket_scales=None,
+                    pack_dtype=pd,
                 )
-            )
-            qps = bs / t
-            rows[bs] = qps
-            print(f"{name},{bs},{qps:.1f},{t / bs * 1e3:.3f}")
-        out[name] = rows
-    return out
+                idx.ensure_bucket_major()
+            try:
+                engine = get_engine(idx, name)
+            except Exception as e:      # e.g. sharded divisibility
+                print(f"# {name} skipped: {e}")
+                continue
+            qt = _query_tile_of(idx, K_NN) if name == "fused" else None
+            label = pd or "float32"
+            for bs in batch_sizes:
+                qids = rng.choice(sz["n_docs"], bs, replace=False)
+                qw = docs[jnp.asarray(qids)]
+                ex = jnp.asarray(qids, jnp.int32)
+                t, _ = timed(
+                    lambda e=engine, q=qw, x=ex: e.search(
+                        q, probes=PROBES, k=K_NN, exclude=x,
+                        rescore=rescore,
+                    )
+                )
+                entry = {
+                    "backend": name, "batch": bs,
+                    "qps": round(bs / t, 2),
+                    "ms_per_query": round(t / bs * 1e3, 3),
+                    "pack_dtype": label, "query_tile": qt,
+                    "rescore": rescore,
+                }
+                entries.append(entry)
+                print(f"{name},{label},{qt},{bs},{entry['qps']:.1f},"
+                      f"{entry['ms_per_query']:.3f}")
+    return entries
 
 
 if __name__ == "__main__":
     parser = std_parser(__doc__)
     parser.add_argument(
-        "--pack-dtype", default=None, choices=[None, "bfloat16"],
-        help="bucket-major storage dtype for the fused backend "
-             "(bfloat16 halves packed HBM bytes)")
+        "--pack-dtype", default=None,
+        choices=[None, "float32", "bfloat16", "int8"],
+        help="restrict the fused backend to ONE bucket-major storage dtype "
+             "(default sweeps float32, bfloat16 and int8; bf16 halves and "
+             "int8 quarters the packed HBM bytes)")
+    parser.add_argument(
+        "--rescore", type=int, default=None,
+        help="exact-rescore tail depth (>= k) applied to every search — "
+             "prices the fp32 gather+matmul re-rank into the QPS numbers")
     args = parser.parse_args()
-    run(args.scale, args.seed, pack_dtype=args.pack_dtype)
+    dts = (
+        (None, "bfloat16", "int8") if args.pack_dtype is None
+        else (None,) if args.pack_dtype == "float32"
+        else (args.pack_dtype,)
+    )
+    run(args.scale, args.seed, pack_dtypes=dts, rescore=args.rescore)

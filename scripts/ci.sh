@@ -12,9 +12,12 @@
 #                           and the serving-throughput benchmark (QPS vs
 #                           batch size on every backend — off-TPU this runs
 #                           the query-tiled bucket_score v2 kernel in
-#                           interpret mode, so schedule construction, tile
-#                           padding and the bf16-free fused path are all
-#                           exercised end to end), so regressions anywhere
+#                           interpret mode, so device-side schedule
+#                           construction, tile padding and the fp32/bf16/
+#                           int8 pack sweep are all exercised end to end,
+#                           plus a second pass that builds an int8-packed
+#                           index and serves every search through the
+#                           exact-rescore tail), so regressions anywhere
 #                           in the build->serve->mutate path fail CI, not
 #                           just unit tests
 #
@@ -46,4 +49,7 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: serving throughput (tiled bucket_score v2, interpret off-TPU)"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.throughput --scale quick
+  echo "[ci] smoke: int8 quantised pack + exact-rescore tail"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.throughput --scale quick --pack-dtype int8 --rescore 20
 fi

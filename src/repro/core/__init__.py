@@ -40,8 +40,8 @@ from .cluster import (
     register_clusterer,
 )
 from .index import (
-    LADDER_DRIFT_THRESHOLD, ClusterPruneIndex, pack_buckets,
-    pack_buckets_major,
+    LADDER_DRIFT_THRESHOLD, SUPPORTED_PACK_DTYPES, ClusterPruneIndex,
+    pack_buckets, pack_buckets_major, validate_pack_dtype,
 )
 from .engine import (
     BACKENDS,
@@ -84,7 +84,7 @@ __all__ = [
     "CLUSTERERS", "Clusterer", "assign_refine", "available_clusterers",
     "get_clusterer", "pick_clusterer", "register_clusterer",
     "ClusterPruneIndex", "LADDER_DRIFT_THRESHOLD", "pack_buckets",
-    "pack_buckets_major",
+    "pack_buckets_major", "validate_pack_dtype", "SUPPORTED_PACK_DTYPES",
     "BACKENDS", "SearchEngine", "available_backends", "get_engine",
     "pick_backend", "register_backend", "split_probes", "sweep_probes",
     "ProbeLadder", "calibrate_index", "isotonic_fit",

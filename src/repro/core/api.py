@@ -29,8 +29,9 @@ wrong one for users. This module is the seam between the two:
     constructs the :class:`~repro.core.index.ClusterPruneIndex`;
     ``retriever.search(request | [requests])`` resolves doc-id vs. vector
     queries, validates weights, plans probes, **batches heterogeneous
-    requests** that share an execution shape ``(backend, probes, k)`` into
-    one engine call each, and decomposes scores on the way out.
+    requests** that share an execution shape ``(backend, probes, k,
+    rescore)`` into one engine call each, and decomposes scores on the way
+    out.
     ``retriever.add(docs)`` / ``retriever.remove(ids)`` mutate the index
     in place (incremental bucket maintenance, no rebuild) and invalidate
     every retriever-level cache.
@@ -144,7 +145,12 @@ class SearchRequest:
     ``probes`` fixes the visited-cluster budget directly; ``recall_target``
     lets :func:`plan_probes` choose it; setting both is an error, setting
     neither uses the retriever's default. ``backend`` overrides the
-    retriever's engine choice for this request only.
+    retriever's engine choice for this request only. ``rescore`` (>= k)
+    opts into the exact-rescore tail: the pruned search runs at that depth
+    and the surviving candidates are re-scored against the fp32 corpus
+    before the final top-k cut — bounding quantised-storage noise
+    (``pack_dtype="bfloat16"``/``"int8"``) at the cost of one extra
+    gather+matmul, honestly charged to ``n_scored``.
     """
 
     query: jnp.ndarray | np.ndarray | Sequence | None = None
@@ -155,6 +161,7 @@ class SearchRequest:
     recall_target: float | None = None
     exclude: int | None = None
     backend: str | None = None
+    rescore: int | None = None
 
     def __post_init__(self):
         if (self.query is None) == (self.like is None):
@@ -177,6 +184,10 @@ class SearchRequest:
         ):
             raise ValueError(
                 f"recall_target must be in (0, 1], got {self.recall_target}"
+            )
+        if self.rescore is not None and self.rescore < self.k:
+            raise ValueError(
+                f"rescore depth must be >= k ({self.k}), got {self.rescore}"
             )
 
     # ------------------------------------------------------------ resolution
@@ -322,10 +333,10 @@ class Retriever:
 
     Owns one :class:`ClusterPruneIndex` and the (cached) engines over it.
     ``search`` accepts a single request or a heterogeneous batch; requests
-    sharing an execution shape ``(backend, probes, k)`` are served by ONE
-    engine call (the engine's batch dimension), others are grouped into as
-    few calls as their shapes allow, and responses come back in request
-    order.
+    sharing an execution shape ``(backend, probes, k, rescore)`` are served
+    by ONE engine call (the engine's batch dimension), others are grouped
+    into as few calls as their shapes allow, and responses come back in
+    request order.
     """
 
     # Cache bounds: FIFO-evicted OrderedDicts. qw rows are (D,) floats
@@ -508,6 +519,7 @@ class Retriever:
             req.recall_target,
             req.exclude,
             req.backend or self.backend,
+            req.rescore,
         )
 
     @staticmethod
@@ -673,18 +685,18 @@ class Retriever:
         plans = [self._plan(r) for r in mreqs]
 
         # Group by execution shape; each group is one engine call.
-        groups: dict[tuple[str, int, int], list[int]] = {}
+        groups: dict[tuple[str, int, int, int | None], list[int]] = {}
         for j, (r, (backend, probes, _)) in enumerate(zip(mreqs, plans)):
-            groups.setdefault((backend, probes, r.k), []).append(j)
+            groups.setdefault((backend, probes, r.k, r.rescore), []).append(j)
 
-        for (backend, probes, k), rows in groups.items():
+        for (backend, probes, k, rescore), rows in groups.items():
             opts = self.engine_opts if backend == self.backend else {}
             engine = get_engine(index, backend, **opts)
             qw = qw_all[jnp.asarray(rows)]
             excl = jnp.asarray(excl_all[rows])
             t0 = time.perf_counter()
             scores, ids, n_scored = engine.search(
-                qw, probes=probes, k=k, exclude=excl
+                qw, probes=probes, k=k, exclude=excl, rescore=rescore
             )
             jax.block_until_ready(scores)
             dt = time.perf_counter() - t0

@@ -189,6 +189,7 @@ def calibrate_index(
     seed: int = 0,
     backend: str | None = None,
     engine_opts: Mapping | None = None,
+    rescore: int | None = None,
     store: bool = True,
 ) -> ProbeLadder:
     """Fit a :class:`ProbeLadder` for one built index (sample -> sweep -> fit).
@@ -204,6 +205,10 @@ def calibrate_index(
     gives the same curve; ``engine_opts`` (e.g. ``{"query_tile": 16}`` for
     the fused backend) pass through to the sweep's engine resolution, which
     reuses opts-keyed cached engines across levels and repeat calibrations.
+    ``rescore`` applies the exact-rescore tail at every sweep level — an
+    index served with ``SearchRequest(rescore=...)`` (e.g. an int8 pack
+    behind a rescored cut) should calibrate on the curve it will actually
+    serve; the depth is recorded in the ladder's ``meta``.
 
     ``store=True`` (default) attaches the ladder to ``index.ladder``, where
     ``Retriever._plan`` and ``ClusterPruneIndex.save`` pick it up, and
@@ -259,7 +264,7 @@ def calibrate_index(
 
     sweep = sweep_probes(
         index, qw, probe_grid=grid, k=k, exclude=exclude, backend=backend,
-        engine_opts=engine_opts,
+        engine_opts=engine_opts, rescore=rescore,
     )
     measured = [
         float(jnp.mean(recall_fraction(ids, gt_ids))) for _, ids, _ in sweep
@@ -277,6 +282,7 @@ def calibrate_index(
             "k": int(k),
             "seed": int(seed),
             "backend": backend or "auto",
+            "rescore": None if rescore is None else int(rescore),
             "measured_recall": [float(r) for r in measured],
         },
     )

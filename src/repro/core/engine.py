@@ -13,10 +13,13 @@ distributed path with its own API. This module unifies them behind a single
     The query-tiled Pallas ``bucket_score`` v2 kernel over the bucket-major
     ``(T*K, B, D)`` corpus materialised at index build time (interpret-mode
     off-TPU): probes are contiguous block DMAs instead of row gathers, a
-    per-tile probe-dedup schedule reads each shared bucket from HBM once
-    per query tile, and each block is scored against the whole tile as one
-    ``(QT, D)×(D, B)`` MXU matmul (optionally over bf16 bucket storage with
-    fp32 accumulation).
+    per-tile probe-dedup schedule — built ON DEVICE under ``jit``
+    (:func:`~repro.kernels.bucket_score.ops.build_probe_schedule_device`,
+    no host round-trip in the hot path) — reads each shared bucket from HBM
+    once per query tile, and each block is scored against the whole tile as
+    one ``(QT, D)×(D, B)`` MXU matmul (optionally over bf16 or int8 bucket
+    storage with fp32 accumulation; int8 packs dequantise per bucket via the
+    index's ``bucket_scales``).
 ``sharded``
     The ``shard_map`` doc-sharded path of :mod:`repro.core.distributed` —
     local scoring, one collective-light top-k merge.
@@ -27,6 +30,15 @@ duplicate suppression across overlapping clusterings, ``exclude`` masking,
 and the paper's Fig-1 ``n_scored`` distance-computation accounting — so
 every consumer (serving, benchmarks, examples) measures the same algorithm
 and differs only in the execution mechanism.
+
+All backends also share the opt-in **exact-rescore tail**
+(``search(..., rescore=R)``, ``R >= k``): the pruned search runs at depth
+``R``, the surviving candidates are re-scored against the fp32 doc-major
+corpus in one gather+matmul (:func:`_exact_rescore`), and the final top-k
+cut happens on those exact scores. This bounds whatever noise a reduced
+storage precision injected — the returned ORDER and SCORES are exact for
+the candidate set the pruned search surfaced — and the re-scored
+candidates are honestly charged to ``n_scored``.
 
 Select a backend by name or let :func:`pick_backend` choose from the
 platform (TPU -> ``fused``, multi-device -> ``sharded``, else
@@ -82,6 +94,7 @@ class SearchEngine(Protocol):
         k: int,
         exclude: jnp.ndarray | None = None,
         nav_query: jnp.ndarray | None = None,
+        rescore: int | None = None,
     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """-> (scores (nq, k), ids (nq, k), n_scored (nq,))."""
         ...
@@ -172,6 +185,7 @@ def sweep_probes(
     nav_query: jnp.ndarray | None = None,
     backend: str | None = None,
     engine_opts=None,
+    rescore: int | None = None,
 ) -> list[tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
     """Run ONE engine over a probe grid — the planner-calibration sweep.
 
@@ -185,7 +199,9 @@ def sweep_probes(
     construct-and-trace once, so repeating a sweep (or sharing a qchunk
     between levels) pays no engine churn. ``engine_opts`` pass through to
     every ``get_engine`` resolution (e.g. ``query_tile=`` for the fused
-    backend).
+    backend). ``rescore`` applies the exact-rescore tail at every level, so
+    a planner calibrated for rescored serving measures the curve it will
+    actually serve.
 
     Returns one ``(scores, ids, n_scored)`` tuple per grid entry, in grid
     order.
@@ -208,7 +224,7 @@ def sweep_probes(
         eng = get_engine(index, name, **level_opts)
         out.append(
             eng.search(qw, probes=probes, k=k, exclude=exclude,
-                       nav_query=nav_query)
+                       nav_query=nav_query, rescore=rescore)
         )
     return out
 
@@ -272,6 +288,55 @@ class _EngineBase:
             + t * k_clusters
         )
 
+    def _search_rescored(
+        self, qw, *, probes, k, rescore, exclude=None, nav_query=None
+    ):
+        """Exact-rescore tail shared by every backend.
+
+        Runs the backend's own pruned search at depth ``rescore`` (>= k),
+        then re-scores the surviving candidates against the fp32 doc-major
+        corpus in one gather+matmul and cuts the final top-k on those exact
+        scores. On an fp32 pack this is an identity on the returned
+        ``(scores, ids)`` (candidates were already scored exactly); on a
+        bf16/int8 pack it removes the storage-precision noise from the
+        returned order. The re-scored candidates are real distance
+        computations, so they are added to ``n_scored``.
+        """
+        rescore = int(rescore)
+        if rescore < k:
+            raise ValueError(
+                f"rescore depth {rescore} must be >= k ({k})"
+            )
+        qw2, nav, exclude, single = self._canonical(qw, nav_query, exclude)
+        s, ids, n_scored = self.search(
+            qw2, probes=probes, k=rescore, exclude=exclude, nav_query=nav
+        )
+        rs, ri, extra = _exact_rescore(self.index.docs, qw2, ids, k)
+        return self._finish(single, rs, ri, n_scored + extra)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _exact_rescore(docs, qw, ids, k):
+    """Re-score candidate ids against the fp32 corpus; exact top-k cut.
+
+    ``ids`` may contain ``-1`` fillers (pruned search found fewer than
+    ``rescore`` live candidates) — they score ``-inf`` and return as ``-1``.
+    Also returns the per-query count of candidates actually re-scored, for
+    honest Fig-1 accounting.
+    """
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    cvecs = docs[safe]                                   # (nq, R, D)
+    s = jnp.einsum(
+        "qrd,qd->qr", cvecs, qw, preferred_element_type=jnp.float32
+    )
+    s = jnp.where(valid, s, -jnp.inf)
+    top_s, pos = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(ids, pos, axis=-1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    extra = jnp.sum(valid, axis=-1).astype(jnp.int32)
+    return top_s, top_i, extra
+
 
 # ------------------------------------------------------------------ reference
 @register_backend("reference")
@@ -282,7 +347,13 @@ class ReferenceEngine(_EngineBase):
         super().__init__(index)
         self.qchunk = qchunk
 
-    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None,
+               rescore=None):
+        if rescore is not None:
+            return self._search_rescored(
+                qw, probes=probes, k=k, rescore=rescore, exclude=exclude,
+                nav_query=nav_query,
+            )
         index = self.index
         qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
         nq = qw.shape[0]
@@ -379,14 +450,21 @@ class FusedEngine(_EngineBase):
     rather than with redundant block reads; ragged batch tails are padded
     to the tile and sliced off. The in-kernel running top-k suppresses
     duplicates across overlapping clusterings exactly like the reference
-    path, and the bucket-major tensor may be stored bf16
-    (``ClusterPruneIndex`` ``pack_dtype``) with fp32 accumulation.
+    path, and the bucket-major tensor may be stored bf16 or int8
+    (``ClusterPruneIndex`` ``pack_dtype``) with fp32 accumulation — the
+    int8 pack's per-bucket ``bucket_scales`` ride along and dequantise each
+    score block inside the kernel.
 
-    Schedule construction syncs the probe tensor to the host (numpy) — the
-    engine API is synchronous anyway, and a data-dependent schedule is the
-    whole point (a static-shape device schedule would be the dedup-free
-    worst case). Runs interpreted off-TPU (bit-compatible, slow — tests/CI
-    only).
+    The schedule is built ON DEVICE
+    (:func:`~repro.kernels.bucket_score.ops.build_probe_schedule_device`):
+    a jitted segmented dedup over a *bucketed static* schedule length
+    ``S = pow2ceil(min(QT·P, n_buckets))``
+    (:func:`~repro.kernels.bucket_score.ops.schedule_length`), so the hot
+    path never synchronises the probe tensor HBM→host→HBM. Padded schedule
+    slots all target bucket 0 with zero membership — consecutive equal
+    block indices, so the Pallas pipeline skips their repeat DMAs and the
+    dedup win survives the static upper bound. Runs interpreted off-TPU
+    (bit-compatible, slow — tests/CI only).
     """
 
     def __init__(
@@ -400,32 +478,45 @@ class FusedEngine(_EngineBase):
         self.interpret = interpret
         self.query_tile = query_tile
 
-    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
-        import numpy as np
-
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None,
+               rescore=None):
+        if rescore is not None:
+            return self._search_rescored(
+                qw, probes=probes, k=k, rescore=rescore, exclude=exclude,
+                nav_query=nav_query,
+            )
         from ..kernels.bucket_score import bucket_score_tiled
         from ..kernels.bucket_score.ops import (
-            build_probe_schedule, pick_query_tile,
+            build_probe_schedule_device, pick_query_tile, schedule_length,
         )
         from ..kernels.common import pad_to
 
         qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
-        data, ids = self.index.ensure_bucket_major()     # (T*K, B, D), (T*K, B)
+        # (T*K, B, D), (T*K, B), (T*K,) | None
+        data, ids, scales = self.index.ensure_bucket_major()
         flat = self._flat_probes(nav, self._probes_t(probes))
-        b, d = int(data.shape[1]), int(data.shape[2])
+        n_buckets, b, d = (int(x) for x in data.shape)
         qt = self.query_tile
         if qt is None:
-            # VMEM budget caps the tile; the batch floors it — a small
-            # batch padded to a large tile would matmul and top-k mostly
-            # dead rows per scheduled bucket.
+            # VMEM budget caps the tile (a reduced-precision pack shrinks
+            # the bucket block and buys a larger tile); the batch floors it
+            # — a small batch padded to a large tile would matmul and top-k
+            # mostly dead rows per scheduled bucket.
             qt = min(
-                pick_query_tile(d, b, k_pad=pad_to(k, 8)),
+                pick_query_tile(
+                    d, b, k_pad=pad_to(k, 8),
+                    pack_itemsize=data.dtype.itemsize,
+                ),
                 pad_to(qw.shape[0], 8),
             )
-        sched, member = build_probe_schedule(np.asarray(flat), qt)
+        # Jitted dedup with bucketed static S — no host numpy round-trip.
+        s_len = schedule_length(qt, int(flat.shape[1]), n_buckets)
+        sched, member = build_probe_schedule_device(
+            flat, query_tile=qt, s_len=s_len
+        )
         s, i = bucket_score_tiled(
-            qw, data, ids, jnp.asarray(sched), jnp.asarray(member),
-            k=k, exclude=exclude, interpret=self.interpret,
+            qw, data, ids, sched, member,
+            k=k, exclude=exclude, scales=scales, interpret=self.interpret,
         )
         i = jnp.where(jnp.isfinite(s), i, -1)
         return self._finish(single, s, i, self._n_scored(flat))
@@ -470,7 +561,13 @@ class ShardedEngine(_EngineBase):
             )
         )
 
-    def search(self, qw, *, probes, k, exclude=None, nav_query=None):
+    def search(self, qw, *, probes, k, exclude=None, nav_query=None,
+               rescore=None):
+        if rescore is not None:
+            return self._search_rescored(
+                qw, probes=probes, k=k, rescore=rescore, exclude=exclude,
+                nav_query=nav_query,
+            )
         from .distributed import distributed_index_search
 
         qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)

@@ -51,8 +51,41 @@ from .weights import weighted_query
 
 __all__ = [
     "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
+    "validate_pack_dtype", "SUPPORTED_PACK_DTYPES",
     "LADDER_DRIFT_THRESHOLD",
 ]
+
+# Storage precisions the bucket-major pack (and the fused scoring kernel)
+# support. fp32 = corpus dtype; bf16 halves the packed bytes (plain cast);
+# int8 quarters them (symmetric per-bucket quantisation, scales carried in
+# ``bucket_scales``). Validated in ONE place (:func:`validate_pack_dtype`)
+# so build / load / lazy re-pack all fail with the same clear error.
+SUPPORTED_PACK_DTYPES = ("float32", "bfloat16", "int8")
+
+
+def validate_pack_dtype(pack_dtype) -> str | None:
+    """Canonicalise and validate a ``pack_dtype`` spec.
+
+    Accepts None (keep the corpus dtype), a dtype-like, or a string; returns
+    the canonical dtype name or None. Raises ``ValueError`` listing the
+    supported precisions for anything else — the single choke point for
+    build, ``load``, and every lazy re-pack (``ensure_bucket_major``).
+    """
+    if pack_dtype is None:
+        return None
+    try:
+        name = jnp.dtype(pack_dtype).name
+    except TypeError as e:
+        raise ValueError(
+            f"unsupported pack_dtype {pack_dtype!r}: not a dtype "
+            f"(supported: {', '.join(SUPPORTED_PACK_DTYPES)})"
+        ) from e
+    if name not in SUPPORTED_PACK_DTYPES:
+        raise ValueError(
+            f"unsupported pack_dtype {name!r} "
+            f"(supported: {', '.join(SUPPORTED_PACK_DTYPES)})"
+        )
+    return name
 
 # Fraction of the corpus that may churn (adds + removes) before a calibrated
 # ProbeLadder is reported stale: the recall-vs-probes curve was measured on
@@ -95,7 +128,7 @@ def pack_buckets(
 
 def pack_buckets_major(
     docs: jnp.ndarray, buckets: jnp.ndarray, n: int, dtype=None
-) -> jnp.ndarray:
+) -> tuple[jnp.ndarray, jnp.ndarray | None]:
     """Bucket-major layout: (n, D) corpus + (T, K, B) ids -> (T, K, B, D).
 
     Sentinel slots (id == ``n``) point at row 0; consumers mask them via the
@@ -105,18 +138,23 @@ def pack_buckets_major(
     kernel-side :func:`repro.kernels.bucket_score.ops.pack_bucket_major`
     after normalising this module's sentinel-``n`` padding to its ``-1``.
 
-    ``dtype`` (e.g. ``"bfloat16"``) selects a reduced storage precision for
-    the packed tensor — half the HBM bytes and half the scoring bandwidth;
-    the fused kernel accumulates fp32 regardless, and navigation keeps the
-    fp32 leaders. The doc-major corpus and every other consumer stay fp32.
+    ``dtype`` selects the storage precision of the packed tensor —
+    ``"bfloat16"`` halves the HBM bytes and the scoring bandwidth,
+    ``"int8"`` quarters them via symmetric per-bucket quantisation; the
+    fused kernel accumulates fp32 regardless, and navigation keeps the fp32
+    leaders. The doc-major corpus and every other consumer stay fp32.
+
+    Returns ``(data (T, K, B, D), scales (T, K) fp32 | None)`` — scales are
+    non-None only for the int8 pack.
     """
     from ..kernels.bucket_score.ops import pack_bucket_major
 
-    data, _ = pack_bucket_major(
+    dtype = validate_pack_dtype(dtype)
+    data, _, scales = pack_bucket_major(
         docs, jnp.where(buckets < n, buckets, -1),
         dtype=None if dtype is None else jnp.dtype(dtype),
     )
-    return data
+    return data, scales
 
 
 @dataclasses.dataclass
@@ -131,6 +169,7 @@ class ClusterPruneIndex:
     method: str = "fpf"
     assign: np.ndarray | None = None        # (T, n) cluster of each doc (-1 = removed)
     bucket_data: jnp.ndarray | None = None  # (T, K, B, D) bucket-major corpus
+    bucket_scales: jnp.ndarray | None = None  # (T, K) fp32 int8 dequant scales
     pack_dtype: str | None = None           # bucket-major storage dtype (None = docs')
     ladder: object | None = None            # fitted ProbeLadder (or None)
     removed: np.ndarray | None = None       # (n,) bool tombstones (or None)
@@ -170,13 +209,17 @@ class ClusterPruneIndex:
         TPU (the fused auto-pick platform) and within a modest memory budget
         — either way the layout conversion happens exactly once per index.
 
-        ``pack_dtype`` (e.g. ``"bfloat16"``): storage dtype of the
-        bucket-major tensor only — halves its HBM footprint and the
-        bandwidth the fused scoring matmul must hide, doubling the corpus
-        that fits the pack budget; the kernel accumulates fp32
-        (``preferred_element_type``) and navigation keeps the fp32 leaders.
-        Persisted with the index, honoured by every (re-)pack including the
-        lazy one after mutations. None keeps the corpus dtype (fp32).
+        ``pack_dtype``: storage dtype of the bucket-major tensor only
+        (:data:`SUPPORTED_PACK_DTYPES`). ``"bfloat16"`` halves its HBM
+        footprint and the bandwidth the fused scoring matmul must hide;
+        ``"int8"`` quarters them via symmetric per-bucket quantisation
+        (scales land in ``bucket_scales`` and persist with the index) —
+        quadruple the corpus per pack budget. Either way the kernel
+        accumulates fp32 (``preferred_element_type``) and navigation keeps
+        the fp32 leaders, so probe sets and ``n_scored`` are bit-identical
+        across pack dtypes. Persisted with the index, honoured by every
+        (re-)pack including the lazy one after mutations. None keeps the
+        corpus dtype (fp32).
 
         ``calibrate``: opt-in planner calibration at build — True fits the
         per-index recall->probes :class:`~repro.core.calibrate.ProbeLadder`
@@ -205,7 +248,7 @@ class ClusterPruneIndex:
             for ids in ids_l
         ]
         buckets = jnp.asarray(np.stack(ids_l))
-        pack_dtype = None if pack_dtype is None else jnp.dtype(pack_dtype).name
+        pack_dtype = validate_pack_dtype(pack_dtype)
         if pack_major is None:
             itemsize = (
                 docs.dtype.itemsize if pack_dtype is None
@@ -216,6 +259,10 @@ class ClusterPruneIndex:
                 and buckets.size * docs.shape[1] * itemsize
                 <= _PACK_MAJOR_AUTO_BYTES
             )
+        bucket_data, bucket_scales = (
+            pack_buckets_major(docs, buckets, n, dtype=pack_dtype)
+            if pack_major else (None, None)
+        )
         index = cls(
             spec=spec,
             docs=docs,
@@ -224,10 +271,8 @@ class ClusterPruneIndex:
             counts=jnp.asarray(np.stack(counts_l)),
             method=clusterer.name,
             assign=np.stack(assign_l).astype(np.int64),
-            bucket_data=(
-                pack_buckets_major(docs, buckets, n, dtype=pack_dtype)
-                if pack_major else None
-            ),
+            bucket_data=bucket_data,
+            bucket_scales=bucket_scales,
             pack_dtype=pack_dtype,
         )
         from collections.abc import Mapping
@@ -289,6 +334,7 @@ class ClusterPruneIndex:
         search), cached engines re-materialise on next ``get_engine`` —
         retriever-level caches key off ``version``."""
         self.bucket_data = None
+        self.bucket_scales = None
         self.__dict__.pop("_bucket_major_flat", None)
         self.__dict__.pop("_engines", None)
         self.version += 1
@@ -429,18 +475,22 @@ class ClusterPruneIndex:
         self._invalidate()
         return int(fresh.size)
 
-    def ensure_bucket_major(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def ensure_bucket_major(
+        self,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray | None]:
         """Bucket-major view for the fused backend: ``((T*K, B, D) data,
-        (T*K, B) ids with -1 padding)``. Materialises the data tensor if the
-        build deferred it — in ``pack_dtype`` storage precision when the
-        index carries one (bf16 halves the packed HBM bytes) — and caches
-        the flattened view so the serving hot path pays no per-query layout
-        work."""
+        (T*K, B) ids with -1 padding, (T*K,) fp32 scales | None)``.
+        Materialises the data tensor if the build deferred it — in
+        ``pack_dtype`` storage precision when the index carries one (bf16
+        halves the packed HBM bytes, int8 quarters them and fills the
+        per-bucket dequantisation scales) — and caches the flattened view so
+        the serving hot path pays no per-query layout work."""
         cached = getattr(self, "_bucket_major_flat", None)
         if cached is not None:
             return cached
+        self.pack_dtype = validate_pack_dtype(self.pack_dtype)
         if self.bucket_data is None:
-            self.bucket_data = pack_buckets_major(
+            self.bucket_data, self.bucket_scales = pack_buckets_major(
                 self.docs, self.buckets, self.n_docs, dtype=self.pack_dtype
             )
         t, k_clusters, b, d = self.bucket_data.shape
@@ -448,6 +498,10 @@ class ClusterPruneIndex:
         self._bucket_major_flat = (
             self.bucket_data.reshape(t * k_clusters, b, d),
             ids.reshape(t * k_clusters, b).astype(jnp.int32),
+            (
+                None if self.bucket_scales is None
+                else self.bucket_scales.reshape(t * k_clusters)
+            ),
         )
         return self._bucket_major_flat
 
@@ -456,9 +510,11 @@ class ClusterPruneIndex:
         """Serialize the index — calibrated ladder and mutation state
         (tombstones, ladder-drift counter) included — to one ``.npz``. The
         bucket-major tensor is NOT stored (it is a pure layout transform,
-        re-derived lazily on load); the ladder IS, so a loaded index keeps
-        its honest ``recall_target=`` planning without re-paying the
-        calibration sweep — and keeps knowing when that ladder went stale."""
+        re-derived lazily on load in ``pack_dtype`` precision); the tiny
+        per-bucket int8 ``bucket_scales`` ARE, as is the ladder, so a loaded
+        index keeps its honest ``recall_target=`` planning without re-paying
+        the calibration sweep — and keeps knowing when that ladder went
+        stale."""
         import json
 
         np.savez_compressed(
@@ -484,6 +540,11 @@ class ClusterPruneIndex:
             ),
             n_mutations=np.int64(self.n_mutations),
             pack_dtype=np.str_(self.pack_dtype or ""),
+            bucket_scales=(
+                np.asarray(self.bucket_scales)
+                if self.bucket_scales is not None
+                else np.zeros((0, 0), np.float32)
+            ),
         )
 
     @classmethod
@@ -498,6 +559,10 @@ class ClusterPruneIndex:
         assign = z["assign"]
         ladder_json = str(z["ladder"])
         removed = z["removed"] if "removed" in z.files else np.zeros(0, bool)
+        scales = (
+            z["bucket_scales"] if "bucket_scales" in z.files
+            else np.zeros((0, 0), np.float32)
+        )
         return cls(
             spec=FieldSpec(
                 names=tuple(str(n) for n in z["names"]),
@@ -517,10 +582,11 @@ class ClusterPruneIndex:
             n_mutations=(
                 int(z["n_mutations"]) if "n_mutations" in z.files else 0
             ),
-            pack_dtype=(
-                str(z["pack_dtype"]) or None
+            pack_dtype=validate_pack_dtype(
+                (str(z["pack_dtype"]) or None)
                 if "pack_dtype" in z.files else None
             ),
+            bucket_scales=jnp.asarray(scales) if scales.size else None,
         )
 
     # ----------------------------------------------------------------- search

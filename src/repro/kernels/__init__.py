@@ -12,7 +12,9 @@ wrapper), ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
 from .topk_score import topk_score, topk_score_ref
 from .bucket_score import bucket_score, bucket_score_ref, bucket_score_tiled
 from .bucket_score.ops import (
-    build_probe_schedule, pack_bucket_major, pick_query_tile,
+    build_probe_schedule, build_probe_schedule_device,
+    dequantize_bucket_major, pack_bucket_major, pick_query_tile,
+    quantize_bucket_major, schedule_length,
 )
 from .fpf_iter import fpf_iter, fpf_iter_ref
 from .fpf_iter.ops import fpf_centers_fused
@@ -21,7 +23,9 @@ from .embed_bag import embed_bag, embed_bag_ref
 __all__ = [
     "topk_score", "topk_score_ref",
     "bucket_score", "bucket_score_tiled", "bucket_score_ref",
-    "build_probe_schedule", "pick_query_tile", "pack_bucket_major",
+    "build_probe_schedule", "build_probe_schedule_device", "schedule_length",
+    "pick_query_tile", "pack_bucket_major",
+    "quantize_bucket_major", "dequantize_bucket_major",
     "fpf_iter", "fpf_iter_ref", "fpf_centers_fused",
     "embed_bag", "embed_bag_ref",
 ]

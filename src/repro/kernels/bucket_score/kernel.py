@@ -17,14 +17,26 @@ Two generations of the kernel live here:
     Grid ``(nq/QT, S)`` with a ``(QT, D)`` query block: each step scores one
     DMA'd bucket against a whole *query tile* as a ``(QT, D)×(D, B)`` MXU
     matmul with fp32 accumulation (``preferred_element_type`` — the bucket
-    tensor may be stored bf16). ``S`` indexes a per-tile **deduplicated
-    probe schedule** built engine-side (see
-    :func:`repro.kernels.bucket_score.ops.build_probe_schedule`): the union
-    of the tile's flat probe lists, each shared bucket appearing ONCE, so a
-    bucket probed by many queries of the tile is read from HBM once per
-    tile instead of once per query. A scalar-prefetched schedule selects
-    the block; a per-step ``(QT,)`` membership mask keeps each query's
-    candidate set exactly its own probed buckets.
+    tensor may be stored bf16 or int8; an int8 pack additionally carries
+    per-bucket dequantisation scales applied to the score block, see below).
+    ``S`` indexes a per-tile **deduplicated probe schedule** built
+    engine-side (see
+    :func:`repro.kernels.bucket_score.ops.build_probe_schedule_device`):
+    the union of the tile's flat probe lists, each shared bucket appearing
+    ONCE, so a bucket probed by many queries of the tile is read from HBM
+    once per tile instead of once per query. A scalar-prefetched schedule
+    selects the block; a per-step ``(QT,)`` membership mask keeps each
+    query's candidate set exactly its own probed buckets.
+
+Quantised packs: an int8 bucket block stores symmetric per-bucket
+quantised values ``q = round(v / scale)`` with ``scale = absmax / 127``.
+Every int8 value is exactly representable in bf16, so the kernel casts
+both operands to bf16, lets the MXU accumulate fp32, then multiplies the
+``(QT, B)`` score block by the bucket's scalar scale — algebraically
+``scale · Σ qᵀv``, i.e. the fp32 dot of the *dequantised* vectors with no
+extra rounding beyond the quantisation itself. Navigation never sees the
+quantised data (fp32 leaders), so probe sets and ``n_scored`` are
+bit-identical across pack dtypes.
 
 Both kernels keep running top-k accumulators in VMEM (``(1, k_pad)`` /
 ``(QT, k_pad)``) and suppress duplicate ids across the T overlapping
@@ -35,8 +47,10 @@ a candidate whose score was masked to ``-inf`` can never displace an
 ``(-inf, -1)`` accumulator slot, so the accumulator never holds a real id
 at ``-inf`` — and therefore never masks a live candidate it did not beat.
 
-VMEM per v2 step: ``QT·D + B·D + QT·B + 2·QT·k_pad`` words — QT is sized
-from this budget by :func:`repro.kernels.bucket_score.ops.pick_query_tile`.
+VMEM per v2 step: ``QT·D + B·D·(itemsize/4) + QT·B + 2·QT·k_pad`` fp32
+words (the bucket block scales with the pack itemsize — bf16 halves it,
+int8 quarters it) — QT is sized from this budget by
+:func:`repro.kernels.bucket_score.ops.pick_query_tile`.
 """
 
 from __future__ import annotations
@@ -86,8 +100,9 @@ def bucket_score_kernel(
 def bucket_score_tiled_kernel(
     sched_ref,    # (n_tiles, S) int32 — scalar-prefetched dedup'd schedules
     q_ref,        # (QT, D) VMEM — this tile's queries (fp32)
-    bd_ref,       # (1, B, D) VMEM — the scheduled bucket (fp32 or bf16)
+    bd_ref,       # (1, B, D) VMEM — the scheduled bucket (fp32/bf16/int8)
     bi_ref,       # (1, B) int32 VMEM — its global doc ids (-1 pad)
+    sc_ref,       # (1, 1) fp32 VMEM — the bucket's dequantisation scale
     mb_ref,       # (1, 1, QT) int32 VMEM — which tile queries probe it
     ex_ref,       # (QT, 1) int32 — per-query excluded doc id
     s_out,        # (QT, k_pad) VMEM accumulator
@@ -103,12 +118,22 @@ def bucket_score_tiled_kernel(
     data = bd_ref[0]                                   # (B, D)
     ids = bi_ref[...]                                  # (1, B)
     q = q_ref[...]                                     # (QT, D)
-    # Half-precision pack: feed the MXU the storage dtype on both sides and
-    # accumulate fp32 (preferred_element_type) — bandwidth halves, the
-    # reduction stays full precision.
-    if data.dtype != q.dtype:
-        q = q.astype(data.dtype)
-    s = jnp.dot(q, data.T, preferred_element_type=jnp.float32)  # (QT, B)
+    if data.dtype == jnp.int8:
+        # int8 pack: values in [-127, 127] are exact in bf16 — cast both
+        # operands, accumulate fp32, then dequantise the score block with
+        # the bucket's scalar scale (scale · Σ qᵀv, no extra rounding).
+        s = jnp.dot(
+            q.astype(jnp.bfloat16),
+            data.astype(jnp.bfloat16).T,
+            preferred_element_type=jnp.float32,
+        ) * sc_ref[0, 0]                               # (QT, B)
+    else:
+        # Half-precision pack: feed the MXU the storage dtype on both sides
+        # and accumulate fp32 (preferred_element_type) — bandwidth halves,
+        # the reduction stays full precision.
+        if data.dtype != q.dtype:
+            q = q.astype(data.dtype)
+        s = jnp.dot(q, data.T, preferred_element_type=jnp.float32)
     member = mb_ref[0, 0, :][:, None] != 0             # (QT, 1)
     s = jnp.where(member, s, -jnp.inf)                 # not this query's probe
     s = jnp.where(ids >= 0, s, -jnp.inf)               # bucket padding

@@ -2,16 +2,33 @@
 
 ``bucket_score``
     v1 per-query path: grid ``(nq, P)``, one ``(1, D)×(D, B)`` matvec per
-    step. Kept as the baseline and for single-query microbenchmarks.
+    step. Kept as the baseline and for single-query microbenchmarks
+    (fp32/bf16 packs only).
 ``bucket_score_tiled``
     v2 query-tiled path: grid ``(nq/QT, S)`` over a per-tile deduplicated
-    probe *schedule* (:func:`build_probe_schedule`), one ``(QT, D)×(D, B)``
-    MXU matmul per step, fp32 accumulation over optionally bf16 bucket
-    storage. This is what :class:`repro.core.engine.FusedEngine` serves.
+    probe *schedule*, one ``(QT, D)×(D, B)`` MXU matmul per step, fp32
+    accumulation over fp32 / bf16 / int8 bucket storage (int8 packs carry a
+    per-bucket dequantisation ``scales`` operand — see
+    :func:`quantize_bucket_major`). This is what
+    :class:`repro.core.engine.FusedEngine` serves.
+
+Schedules come in two flavours with identical semantics:
+
+``build_probe_schedule``
+    Host numpy — kept for benchmarks/tests that want the tight data-derived
+    ``S`` (max per-tile unique count), and as the oracle for the device path.
+``build_probe_schedule_device``
+    Jittable segmented dedup (sort → first-occurrence scan → scatter) over a
+    *bucketed static* schedule length ``S`` (:func:`schedule_length`, powers
+    of two) — the serving path, so large-batch search never round-trips the
+    probe tensor HBM→host→HBM. Padded slots all point at bucket 0 with zero
+    membership; because they are consecutive and equal, the Pallas pipeline
+    skips their repeat block fetches.
 
 ``pick_query_tile`` sizes QT from the per-step VMEM working set
-``QT·D + B·D + QT·B + 2·QT·k_pad`` words; ``pack_bucket_major`` materialises
-the bucket-major tensor (optionally in a reduced storage dtype).
+``QT·D + B·D·(itemsize/4) + QT·B + 2·QT·k_pad`` fp32 words (the bucket block
+term shrinks with the pack dtype); ``pack_bucket_major`` materialises the
+bucket-major tensor (optionally quantised / reduced precision).
 """
 
 from __future__ import annotations
@@ -31,8 +48,12 @@ __all__ = [
     "bucket_score",
     "bucket_score_tiled",
     "build_probe_schedule",
+    "build_probe_schedule_device",
+    "schedule_length",
     "pick_query_tile",
     "pack_bucket_major",
+    "quantize_bucket_major",
+    "dequantize_bucket_major",
 ]
 
 
@@ -98,24 +119,32 @@ def bucket_score(
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def bucket_score_tiled(
     queries: jnp.ndarray,        # (nq, D) fp32
-    bucket_data: jnp.ndarray,    # (K, B, D) bucket-major corpus (fp32/bf16)
+    bucket_data: jnp.ndarray,    # (K, B, D) bucket-major (fp32/bf16/int8)
     bucket_ids: jnp.ndarray,     # (K, B) int32, -1 padding
     schedule: jnp.ndarray,       # (n_tiles, S) int32 dedup'd bucket schedule
     member: jnp.ndarray,         # (n_tiles, S, QT) int32 membership mask
     *,
     k: int,
     exclude: jnp.ndarray | None = None,
+    scales: jnp.ndarray | None = None,   # (K,) fp32 — required for int8 pack
     interpret: bool | None = None,
 ):
     """Cluster-prune inner loop (v2): query-tiled ``(nq, k)`` scores + ids.
 
-    ``schedule`` and ``member`` come from :func:`build_probe_schedule`:
-    row ``t`` of the schedule is the deduplicated union of the flat probe
-    lists of queries ``[t·QT, (t+1)·QT)``, and ``member[t, s, q]`` says
-    whether tile query ``q`` actually probes ``schedule[t, s]``. Each grid
-    step DMAs ONE bucket block and scores it against the whole tile as a
-    ``(QT, D)×(D, B)`` MXU matmul — a bucket shared by many queries of the
-    tile is read from HBM once per tile instead of once per query.
+    ``schedule`` and ``member`` come from :func:`build_probe_schedule` or
+    :func:`build_probe_schedule_device`: row ``t`` of the schedule is the
+    deduplicated union of the flat probe lists of queries ``[t·QT,
+    (t+1)·QT)``, and ``member[t, s, q]`` says whether tile query ``q``
+    actually probes ``schedule[t, s]``. Each grid step DMAs ONE bucket block
+    and scores it against the whole tile as a ``(QT, D)×(D, B)`` MXU matmul
+    — a bucket shared by many queries of the tile is read from HBM once per
+    tile instead of once per query.
+
+    ``scales`` carries the per-bucket dequantisation factors of an int8
+    pack (:func:`quantize_bucket_major`); the kernel feeds the MXU the
+    int8 values via an exact int8→bf16 cast, accumulates fp32, and applies
+    the scale to the ``(QT, B)`` score block — required iff ``bucket_data``
+    is int8, ignored otherwise.
 
     Queries, exclude, and outputs are ragged-tail padded to ``n_tiles·QT``
     internally; the pad rows have an all-zero membership mask, so they score
@@ -124,13 +153,20 @@ def bucket_score_tiled(
     if interpret is None:
         interpret = use_interpret()
     nq, d = queries.shape
-    _, b, _ = bucket_data.shape
+    n_clusters, b, _ = bucket_data.shape
     n_tiles, s_len = schedule.shape
     qt = member.shape[-1]
     if n_tiles * qt < nq:
         raise ValueError(
             f"schedule covers {n_tiles}x{qt} query rows, batch has {nq}"
         )
+    if bucket_data.dtype == jnp.int8 and scales is None:
+        raise ValueError(
+            "int8 bucket_data requires the per-bucket scales= operand "
+            "(see quantize_bucket_major)"
+        )
+    if scales is None:
+        scales = jnp.ones((n_clusters,), jnp.float32)
     if exclude is None:
         exclude = jnp.full((nq,), -1, jnp.int32)
     pad = n_tiles * qt - nq
@@ -148,6 +184,7 @@ def bucket_score_tiled(
                 pl.BlockSpec((qt, d), lambda t, ss, sc: (t, 0)),
                 pl.BlockSpec((1, b, d), lambda t, ss, sc: (sc[t, ss], 0, 0)),
                 pl.BlockSpec((1, b), lambda t, ss, sc: (sc[t, ss], 0)),
+                pl.BlockSpec((1, 1), lambda t, ss, sc: (sc[t, ss], 0)),
                 pl.BlockSpec((1, 1, qt), lambda t, ss, sc: (t, ss, 0)),
                 pl.BlockSpec((qt, 1), lambda t, ss, sc: (t, 0)),
             ],
@@ -166,6 +203,7 @@ def bucket_score_tiled(
         qp,
         bucket_data,
         bucket_ids.astype(jnp.int32),
+        scales.astype(jnp.float32)[:, None],
         member.astype(jnp.int32),
         ep[:, None],
     )
@@ -184,27 +222,45 @@ def pick_query_tile(
     k_pad: int = 64,
     budget_bytes: int = TILE_VMEM_BUDGET,
     max_tile: int = 128,
+    pack_itemsize: int = 4,
 ) -> int:
     """Size the query tile QT from the v2 kernel's VMEM working set.
 
-    One grid step holds ``QT·D`` query words, the ``B·D`` bucket block, the
+    One grid step holds ``QT·D`` query words, the bucket block
+    (``B·D·pack_itemsize`` bytes — a bf16 pack halves it, int8 quarters it,
+    so reduced-precision storage buys a LARGER tile at the same budget), the
     ``(QT, B)`` score tile and two ``(QT, k_pad)`` accumulators (fp32
-    words): solve ``QT·D + B·D + QT·B + 2·QT·k_pad <= budget/4`` for QT,
-    then clamp to ``[8, max_tile]`` and round down to a sublane multiple of
-    8. A bucket block larger than the whole budget still yields the minimum
-    tile (the kernel remains correct; residency just degrades).
+    words): solve ``QT·D + B·D·itemsize/4 + QT·B + 2·QT·k_pad <= budget/4``
+    for QT, then clamp to ``[8, max_tile]`` and round down to a sublane
+    multiple of 8. A bucket block larger than the whole budget still yields
+    the minimum tile (the kernel remains correct; residency just degrades).
     """
-    free = budget_bytes // 4 - b * d
+    free = budget_bytes // 4 - (b * d * pack_itemsize) // 4
     per_query = d + b + 2 * k_pad
     qt = free // per_query if free > 0 else 0
     qt = max(8, min(max_tile, (qt // 8) * 8))
     return int(qt)
 
 
+def schedule_length(query_tile: int, n_probes: int, n_buckets: int) -> int:
+    """Bucketed static schedule length for the device-side scheduler.
+
+    A tile of ``QT`` queries with ``P`` probes each can reference at most
+    ``min(QT·P, n_buckets)`` distinct buckets (there are only ``T·K``
+    buckets in total — a large batch of overlapping probe lists saturates
+    that long before the dedup-free ``QT·P`` worst case). Rounding up to a
+    power of two buckets the static ``S`` so kernel/schedule traces are
+    shared across every batch whose tight bound lands in the same bucket,
+    instead of re-tracing per data-dependent unique count.
+    """
+    tight = max(1, min(int(query_tile) * int(n_probes), int(n_buckets)))
+    return 1 << (tight - 1).bit_length()
+
+
 def build_probe_schedule(
     probes: np.ndarray, query_tile: int, *, pad_multiple: int = 8
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Probe-dedup scheduler: per-query flat probe lists -> per-tile schedule.
+    """Probe-dedup scheduler (host numpy): flat probe lists -> tile schedule.
 
     ``probes`` is the ``(nq, P)`` flat (``t·K + cluster``) probe tensor the
     engine navigates to (entries < 0 are ignored — used for ragged-tail
@@ -221,9 +277,9 @@ def build_probe_schedule(
     at bucket 0 with an all-zero membership mask; padded query rows
     (``n_tiles·QT > nq``) have zero membership everywhere.
 
-    Host-side numpy on purpose: schedules depend on the probe *values*, so
-    building them on device would force S to the static worst case and
-    erase the dedup win.
+    This is the data-derived-``S`` variant (and the oracle the device path
+    is tested against); serving goes through
+    :func:`build_probe_schedule_device`, which never leaves the device.
     """
     probes = np.asarray(probes)
     nq, _ = probes.shape
@@ -244,17 +300,111 @@ def build_probe_schedule(
     return sched, member
 
 
+@functools.partial(jax.jit, static_argnames=("query_tile", "s_len"))
+def build_probe_schedule_device(
+    probes: jnp.ndarray, *, query_tile: int, s_len: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Jittable probe-dedup scheduler — the sync-free serving path.
+
+    Same contract as :func:`build_probe_schedule` (deduplicated, ascending
+    per-tile schedule + membership masks; entries < 0 ignored) but built
+    entirely on device as a segmented dedup, so ``FusedEngine.search`` never
+    synchronises the probe tensor to the host:
+
+    1. sort each tile's ``QT·P`` flat probe list (invalid ``-1`` entries
+       sink to the front),
+    2. mark first occurrences (``v[i] != v[i-1]``) and prefix-sum them into
+       compacted schedule slots,
+    3. scatter values to ``schedule`` (first occurrences) and ones to
+       ``member`` (every occurrence, at its value's slot).
+
+    ``s_len`` is STATIC — callers size it with :func:`schedule_length`
+    (power-of-two bucket of ``min(QT·P, n_buckets)``, an upper bound on any
+    tile's unique count, so the scatter can never overflow). Unused slots
+    keep bucket 0 with zero membership, exactly like the host builder —
+    being consecutive and equal, their repeat block fetches are skipped by
+    the Pallas pipeline.
+    """
+    nq, p = probes.shape
+    qt = int(query_tile)
+    n_tiles = max(1, -(-nq // qt))
+    pad = n_tiles * qt - nq
+    pp = jnp.pad(
+        probes.astype(jnp.int32), ((0, pad), (0, 0)), constant_values=-1
+    )
+    flat = pp.reshape(n_tiles, qt * p)
+    qidx = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(qt, dtype=jnp.int32), p), (n_tiles, qt * p)
+    )
+
+    def one_tile(f, qi):
+        order = jnp.argsort(f)
+        v = f[order]                                     # ascending, -1s first
+        q = qi[order]
+        valid = v >= 0
+        prev = jnp.concatenate([jnp.full((1,), -2, v.dtype), v[:-1]])
+        first = valid & (v != prev)
+        pos = jnp.cumsum(first.astype(jnp.int32)) - 1    # slot of v's unique
+        pos = jnp.where(valid, pos, s_len)               # invalid -> dump row
+        sched = (
+            jnp.zeros((s_len + 1,), jnp.int32)
+            .at[jnp.where(first, pos, s_len)].set(v)[:s_len]
+        )
+        member = (
+            jnp.zeros((s_len + 1, qt), jnp.int32).at[pos, q].set(1)[:s_len]
+        )
+        return sched, member
+
+    return jax.vmap(one_tile)(flat, qidx)
+
+
+def quantize_bucket_major(data: jnp.ndarray):
+    """Symmetric per-bucket int8 quantisation of a bucket-major tensor.
+
+    ``data`` is ``(..., B, D)`` fp32 (one bucket per leading index); each
+    bucket gets ONE scale ``max|v| / 127`` over its ``(B, D)`` block, so
+    dequantisation is a scalar multiply per scheduled bucket and the
+    elementwise error is bounded by ``scale / 2`` (round-to-nearest).
+    All-empty buckets (absmax 0) take scale 1 so dequantisation stays
+    finite. Returns ``(int8 values, fp32 scales (...,))``.
+    """
+    absmax = jnp.max(jnp.abs(data), axis=(-2, -1))
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(
+        jnp.round(data / scales[..., None, None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_bucket_major(
+    values: jnp.ndarray, scales: jnp.ndarray
+) -> jnp.ndarray:
+    """Inverse of :func:`quantize_bucket_major` (to fp32)."""
+    return values.astype(jnp.float32) * scales[..., None, None]
+
+
 def pack_bucket_major(docs, buckets, *, dtype=None):
     """Host helper: (n, D) corpus + (K, B) id pack -> (K, B, D) bucket-major.
 
     Padded slots point at row 0 but carry id -1, so kernels mask them.
-    ``dtype`` (e.g. ``jnp.bfloat16``) stores the bucket-major tensor in a
-    reduced precision — half the HBM bytes and half the bandwidth the
-    scoring matmul has to hide; the kernels accumulate fp32 regardless
-    (``preferred_element_type``), and navigation keeps the fp32 leaders.
+    ``dtype`` selects the storage precision of the packed tensor:
+
+    - ``None`` keeps the corpus dtype (fp32);
+    - ``jnp.bfloat16`` halves the HBM bytes (plain cast);
+    - ``jnp.int8`` quarters them via :func:`quantize_bucket_major` — the
+      third return value then carries the per-bucket fp32 scales the
+      scoring kernel needs.
+
+    The kernels accumulate fp32 regardless (``preferred_element_type``), and
+    navigation keeps the fp32 leaders. Returns ``(data, ids, scales)`` with
+    ``scales=None`` for non-int8 packs.
     """
     safe = jnp.where(buckets >= 0, buckets, 0)
     data = docs[safe]                                  # (K, B, D)
-    if dtype is not None:
+    ids = jnp.where(buckets >= 0, buckets, -1)
+    scales = None
+    if dtype is not None and jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        data, scales = quantize_bucket_major(data)
+    elif dtype is not None:
         data = data.astype(dtype)
-    return data, jnp.where(buckets >= 0, buckets, -1)
+    return data, ids, scales

@@ -4,7 +4,10 @@ One oracle serves both kernel generations: the v2 tiled kernel's
 probe-dedup schedule changes *which HBM reads happen*, never which
 candidates a query scores, so ``bucket_score_tiled`` over
 ``build_probe_schedule(probes, QT)`` must match ``bucket_score_ref`` on the
-same per-query ``probes`` exactly (fp32 pack) or to bf16 tolerance.
+same per-query ``probes`` exactly (fp32 pack) or to reduced-precision
+tolerance (bf16 casts the operands; int8 dequantises through the
+per-bucket ``scales`` before the fp32 einsum, so the only divergence from
+the tiled kernel is the kernel's bf16 query cast).
 """
 
 from __future__ import annotations
@@ -22,9 +25,20 @@ def bucket_score_ref(
     probes: jnp.ndarray,         # (nq, P) cluster ids to visit
     k: int,
     exclude: jnp.ndarray | None = None,   # (nq,)
+    scales: jnp.ndarray | None = None,    # (K,) fp32 — int8 pack only
 ):
     """Gather all probed buckets, score, dedup by id, exact top-k."""
     nq = queries.shape[0]
+    if bucket_data.dtype == jnp.int8:
+        if scales is None:
+            raise ValueError(
+                "int8 bucket_data requires the per-bucket scales= operand"
+            )
+        bucket_data = (
+            bucket_data.astype(jnp.float32) * scales[:, None, None]
+        )
+    elif bucket_data.dtype != jnp.float32:
+        bucket_data = bucket_data.astype(jnp.float32)
     data = bucket_data[probes]                      # (nq, P, B, D)
     ids = bucket_ids[probes].reshape(nq, -1)        # (nq, P*B)
     s = jnp.einsum(

@@ -235,6 +235,51 @@ def test_heterogeneous_batch_routing(retriever, api_corpus):
     assert retriever.search([]) == []
 
 
+def test_rescore_request_validation():
+    with pytest.raises(ValueError, match="rescore depth must be >= k"):
+        SearchRequest(like=3, k=10, rescore=5)
+    # rescore == k is legal (a pure exact-rescore of the returned set)
+    assert SearchRequest(like=3, k=10, rescore=10).rescore == 10
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rescore_through_retriever(retriever, api_corpus, backend):
+    """SearchRequest(rescore=...) reaches the engine on every backend: on
+    the fp32 pack it's an id/score identity that deepens n_scored, and the
+    response scores equal exact fp32 dot products of the returned ids."""
+    docs, spec = api_corpus
+    plain = retriever.search(
+        SearchRequest(like=7, probes=6, k=5, backend=backend))
+    resc = retriever.search(
+        SearchRequest(like=7, probes=6, k=5, rescore=15, backend=backend))
+    assert np.array_equal(resc.doc_ids, plain.doc_ids), backend
+    np.testing.assert_allclose(resc.scores, plain.scores, atol=1e-5)
+    assert resc.n_scored > plain.n_scored
+    qw = weighted_query(docs[7][None], jnp.full((1, 3), 1 / 3), spec)
+    exact = np.asarray(docs[jnp.asarray(resc.doc_ids)] @ qw[0])
+    np.testing.assert_allclose(resc.scores, exact, atol=1e-5)
+
+
+def test_rescore_batching_and_cache_key(fresh_retriever):
+    """rescore participates in batch grouping and the response-cache key:
+    same request with/without rescore are distinct groups AND distinct
+    cached responses."""
+    retriever, docs, spec = fresh_retriever
+    reqs = [
+        SearchRequest(like=3, probes=6, k=5),
+        SearchRequest(like=4, probes=6, k=5),
+        SearchRequest(like=5, probes=6, k=5, rescore=12),
+    ]
+    out = retriever.search(reqs)
+    assert out[0].batch_size == 2 and out[1].batch_size == 2
+    assert out[2].batch_size == 1
+    plain = retriever.search(SearchRequest(like=3, probes=6, k=5))
+    resc = retriever.search(SearchRequest(like=3, probes=6, k=5, rescore=12))
+    assert plain is not resc
+    assert retriever.search(
+        SearchRequest(like=3, probes=6, k=5, rescore=12)) is resc
+
+
 def test_mlt_self_exclusion_default(retriever):
     resp = retriever.search(SearchRequest(like=21, probes=8, k=10))
     assert 21 not in resp.ids

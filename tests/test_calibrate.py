@@ -232,6 +232,25 @@ def test_build_calibrate_flag(calib_corpus):
     assert index.ladder.meta["n_queries"] == 12
 
 
+def test_calibrate_with_rescore(calib_corpus):
+    """Calibrating under a rescore tail records it in the ladder meta (the
+    curve is only honest for searches served the same way) and still fits a
+    monotone recall curve."""
+    index = _fresh_index(calib_corpus, key=3)
+    ladder = calibrate_index(
+        index, n_queries=8, n_weight_draws=2, k=5, rescore=15, seed=0,
+        probe_grid=(3, 12, 30),
+    )
+    assert ladder.meta["rescore"] == 15
+    assert np.all(np.diff(ladder.recall) >= 0)
+    # default calibration stays rescore-free and says so
+    plain = calibrate_index(
+        _fresh_index(calib_corpus, key=4), n_queries=8, n_weight_draws=2,
+        k=5, seed=0, probe_grid=(3, 12, 30),
+    )
+    assert plain.meta["rescore"] is None
+
+
 # ------------------------------------------------------------- serialization
 def test_ladder_roundtrip(tmp_path, calibrated):
     """to_dict/from_dict and save/load reproduce the ladder exactly."""

@@ -241,11 +241,12 @@ def bf16_index(built_index):
 
 
 def test_bf16_pack_halves_bucket_major_bytes(built_index, bf16_index):
-    d32, i32 = built_index.ensure_bucket_major()
-    d16, i16 = bf16_index.ensure_bucket_major()
+    d32, i32, sc32 = built_index.ensure_bucket_major()
+    d16, i16, sc16 = bf16_index.ensure_bucket_major()
     assert d16.dtype == jnp.bfloat16
     assert d16.nbytes * 2 == d32.nbytes
     assert np.array_equal(np.asarray(i16), np.asarray(i32))
+    assert sc32 is None and sc16 is None      # scales are an int8-only thing
 
 
 @pytest.mark.parametrize("nq", [1, QT - 1, 2 * QT + 3])
@@ -280,6 +281,193 @@ def test_bf16_pack_parity(built_index, bf16_index, engine_corpus, nq):
     assert np.array_equal(np.asarray(out[1]), np.asarray(tref[1])), (
         "bf16 fused ids diverge from the bf16-quantised reference"
     )
+
+
+# ------------------------------------------------------------- int8 pack
+@pytest.fixture(scope="module")
+def int8_index(built_index):
+    """The SAME clustering with int8 quantised bucket-major storage —
+    probing (fp32 leaders) and bucket membership are untouched; only the
+    stored vector precision drops."""
+    import dataclasses
+
+    return dataclasses.replace(
+        built_index, bucket_data=None, bucket_scales=None, pack_dtype="int8"
+    )
+
+
+def test_int8_pack_quarters_bucket_major_bytes(built_index, int8_index):
+    d32, i32, sc32 = built_index.ensure_bucket_major()
+    d8, i8, sc8 = int8_index.ensure_bucket_major()
+    assert d8.dtype == jnp.int8
+    assert d8.nbytes * 4 == d32.nbytes
+    assert np.array_equal(np.asarray(i8), np.asarray(i32))
+    assert sc32 is None
+    assert sc8 is not None and sc8.shape == (d8.shape[0],)
+    assert np.all(np.asarray(sc8) > 0)
+
+
+@pytest.mark.parametrize("nq", [1, QT - 1, 2 * QT + 3])
+def test_int8_pack_parity(built_index, int8_index, engine_corpus, nq):
+    """int8 storage: n_scored identical to the fp32 reference (navigation
+    is untouched), scores within the quantisation tolerance, and top-k ids
+    overlapping near-perfectly at every ragged batch shape."""
+    docs, _ = engine_corpus
+    qw = docs[200:200 + nq]
+    ex = jnp.arange(200, 200 + nq, dtype=jnp.int32)
+    out = get_engine(int8_index, "fused", query_tile=QT).search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=10, exclude=ex
+    )
+    assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref[0]), atol=3e-2
+    )
+    i_out, i_ref = np.atleast_2d(np.asarray(out[1])), np.atleast_2d(
+        np.asarray(ref[1]))
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10
+        for a, b in zip(i_out, i_ref)
+    ])
+    assert overlap >= 0.9, overlap
+
+
+# ---------------------------------------------------------- rescore tail
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("nq", [1, QT - 1, QT + 1])
+def test_rescore_fp32_identity(built_index, engine_corpus, backend, nq):
+    """On an fp32 pack the exact-rescore tail re-scores already-exact
+    candidates: ids and scores are IDENTICAL to the plain search on every
+    backend and ragged shape, and only n_scored grows (the re-scored
+    candidates are honestly charged)."""
+    docs, _ = engine_corpus
+    qw = docs[100:100 + nq]
+    ex = jnp.arange(100, 100 + nq, dtype=jnp.int32)
+    eng = get_engine(built_index, backend)
+    s0, i0, n0 = eng.search(qw, probes=6, k=10, exclude=ex)
+    s1, i1, n1 = eng.search(qw, probes=6, k=10, exclude=ex, rescore=25)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1)), backend
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+    assert np.all(np.asarray(n1) > np.asarray(n0))
+    # accounting: exactly the valid depth-25 candidates were re-scored
+    _, i_deep, n_deep = eng.search(qw, probes=6, k=25, exclude=ex)
+    extra = np.sum(np.atleast_2d(np.asarray(i_deep)) >= 0, axis=-1)
+    assert np.array_equal(
+        np.asarray(n1).reshape(-1), np.asarray(n_deep).reshape(-1) + extra
+    )
+
+
+def test_rescore_validates_depth(built_index, engine_corpus):
+    docs, _ = engine_corpus
+    with pytest.raises(ValueError, match="rescore depth"):
+        get_engine(built_index, "reference").search(
+            docs[:4], probes=6, k=10, rescore=5
+        )
+
+
+@pytest.mark.parametrize("nq", [1, QT - 1, 2 * QT + 3])
+def test_rescore_exact_scores_on_quantised_packs(
+    built_index, bf16_index, int8_index, engine_corpus, nq
+):
+    """The rescore tail's contract on quantised storage: every returned
+    score is the EXACT fp32 dot of the returned doc — storage noise can
+    change which candidates surface, never the reported order/scores of
+    the ones that do."""
+    docs, _ = engine_corpus
+    qw = docs[300:300 + nq]
+    ex = jnp.arange(300, 300 + nq, dtype=jnp.int32)
+    for idx, label in ((bf16_index, "bf16"), (int8_index, "int8")):
+        s, ids, _ = get_engine(idx, "fused", query_tile=QT).search(
+            qw, probes=6, k=10, exclude=ex, rescore=20
+        )
+        s = np.atleast_2d(np.asarray(s))
+        ids = np.atleast_2d(np.asarray(ids))
+        qn = np.asarray(qw)
+        dn = np.asarray(built_index.docs)
+        for r in range(s.shape[0]):
+            live = ids[r] >= 0
+            exact = dn[ids[r][live]] @ qn[r]
+            np.testing.assert_allclose(
+                s[r][live], exact, atol=1e-5, err_msg=f"{label} row {r}"
+            )
+            # descending order on the exact scores
+            assert np.all(np.diff(s[r][live]) <= 1e-6), label
+
+
+def test_int8_rescore_recovers_fp32_topk(built_index, int8_index,
+                                         engine_corpus):
+    """With a generous rescore depth the int8 fused path returns the SAME
+    top-k as the fp32 reference on this corpus — the quantised search only
+    proposes candidates; the fp32 tail ranks them."""
+    docs, _ = engine_corpus
+    qw = docs[20:36]
+    ref = get_engine(built_index, "reference").search(qw, probes=6, k=10)
+    out = get_engine(int8_index, "fused", query_tile=QT).search(
+        qw, probes=6, k=10, rescore=30
+    )
+    assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref[0]), atol=1e-5
+    )
+
+
+# ------------------------------------------------- device-side scheduling
+@pytest.mark.parametrize("nq", [1, QT - 1, QT, QT + 1, 3 * QT + 5])
+def test_device_schedule_matches_host_schedule_end_to_end(
+    built_index, engine_corpus, nq
+):
+    """The fused engine's jitted device schedule and the host-numpy oracle
+    schedule drive the tiled kernel to IDENTICAL results on every ragged
+    shape (exclude + cross-clustering dedup + ragged tails)."""
+    from repro.kernels.bucket_score import bucket_score_tiled
+    from repro.kernels.bucket_score.ops import (
+        build_probe_schedule, build_probe_schedule_device, schedule_length,
+    )
+
+    docs, _ = engine_corpus
+    qw = docs[100:100 + nq]
+    ex = jnp.arange(100, 100 + nq, dtype=jnp.int32)
+    eng = get_engine(built_index, "fused", query_tile=QT)
+    data, ids, scales = built_index.ensure_bucket_major()
+    flat = eng._flat_probes(qw, eng._probes_t(6))
+    hs, hm = build_probe_schedule(np.asarray(flat), QT)
+    s_len = schedule_length(QT, int(flat.shape[1]), int(data.shape[0]))
+    ds, dm = build_probe_schedule_device(flat, query_tile=QT, s_len=s_len)
+    host = bucket_score_tiled(qw, data, ids, jnp.asarray(hs),
+                              jnp.asarray(hm), k=10, exclude=ex,
+                              scales=scales)
+    dev = bucket_score_tiled(qw, data, ids, ds, dm, k=10, exclude=ex,
+                             scales=scales)
+    assert np.array_equal(np.asarray(host[1]), np.asarray(dev[1])), nq
+    np.testing.assert_allclose(
+        np.asarray(host[0]), np.asarray(dev[0]), atol=1e-6
+    )
+
+
+def test_fused_search_builds_schedule_under_jit(built_index, engine_corpus,
+                                                monkeypatch):
+    """No host numpy in the fused hot path: FusedEngine.search must never
+    call the host scheduler (the device builder is jitted end to end)."""
+    import importlib
+
+    ops = importlib.import_module("repro.kernels.bucket_score.ops")
+
+    def _boom(*a, **k):
+        raise AssertionError(
+            "FusedEngine.search called the host build_probe_schedule"
+        )
+
+    monkeypatch.setattr(ops, "build_probe_schedule", _boom)
+    docs, _ = engine_corpus
+    out = get_engine(built_index, "fused", query_tile=QT).search(
+        docs[10:22], probes=6, k=5
+    )
+    ref = get_engine(built_index, "reference").search(
+        docs[10:22], probes=6, k=5
+    )
+    _assert_parity(ref, out, "fused-device-schedule")
 
 
 def test_lazy_bucket_major(engine_corpus):

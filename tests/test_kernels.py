@@ -7,10 +7,11 @@ import pytest
 
 from repro.kernels import (
     bucket_score, bucket_score_ref, bucket_score_tiled,
-    build_probe_schedule,
-    embed_bag, embed_bag_ref,
+    build_probe_schedule, build_probe_schedule_device,
+    dequantize_bucket_major, embed_bag, embed_bag_ref,
     fpf_centers_fused, fpf_iter, fpf_iter_ref,
     pack_bucket_major, pick_query_tile,
+    quantize_bucket_major, schedule_length,
     topk_score, topk_score_ref,
 )
 from repro.core import fpf_centers
@@ -107,9 +108,115 @@ def test_build_probe_schedule_dedups_shared_buckets():
     assert np.sum(sched[0][member[0].any(axis=1)] == 7) == 1
 
 
+@pytest.mark.parametrize("nq", [1, 7, 8, 9, 29])
+@pytest.mark.parametrize("qt,p,nb", [(8, 3, 20), (8, 6, 12), (4, 5, 40)])
+def test_build_probe_schedule_device_matches_host(nq, qt, p, nb):
+    """The jittable device scheduler is semantically identical to the host
+    numpy oracle at every ragged batch shape: same deduplicated live
+    schedule per tile (both ascending), same per-query membership sets,
+    zero membership on padded slots and padded query rows."""
+    probes = jax.random.randint(
+        jax.random.PRNGKey(nq * 31 + qt + p), (nq, p), 0, nb
+    )
+    hs, hm = build_probe_schedule(np.asarray(probes), qt)
+    s_len = schedule_length(qt, p, nb)
+    ds, dm = build_probe_schedule_device(probes, query_tile=qt, s_len=s_len)
+    ds, dm = np.asarray(ds), np.asarray(dm)
+    assert ds.shape == (hs.shape[0], s_len) and dm.shape[2] == qt
+    assert s_len >= hs.shape[1] - 8 + 1        # host pads to 8, device to 2^j
+    for ti in range(hs.shape[0]):
+        h_live = hm[ti].any(axis=1)
+        d_live = dm[ti].any(axis=1)
+        # same dedup'd bucket set, both sorted ascending over live slots
+        assert np.array_equal(hs[ti][h_live], ds[ti][d_live])
+        for q in range(qt):
+            want = set(hs[ti][hm[ti, :, q] != 0].tolist())
+            got = set(ds[ti][dm[ti, :, q] != 0].tolist())
+            assert got == want, (ti, q)
+        # padded slots: bucket 0 with zero membership — consecutive equal
+        # block indices, so the Pallas pipeline skips their repeat DMAs
+        assert np.all(ds[ti][~d_live] == 0)
+
+
+def test_quantize_bucket_major_error_bound():
+    """Property test for the symmetric per-bucket int8 quantiser: every
+    element round-trips within scale/2 (round-to-nearest), scales are
+    strictly positive, values stay in [-127, 127], and an all-zero bucket
+    takes scale 1 (finite dequant)."""
+    for seed in range(4):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (6, 16, 24))
+        x = x * (10.0 ** jax.random.randint(
+            jax.random.PRNGKey(100 + seed), (6, 1, 1), -2, 3))
+        x = x.at[0].set(0.0)                          # empty-bucket edge
+        q, scales = quantize_bucket_major(x)
+        assert q.dtype == jnp.int8 and scales.shape == (6,)
+        sc = np.asarray(scales)
+        assert np.all(sc > 0) and sc[0] == 1.0
+        qn = np.asarray(q, np.int32)
+        assert qn.min() >= -127 and qn.max() <= 127
+        deq = np.asarray(dequantize_bucket_major(q, scales))
+        err = np.abs(deq - np.asarray(x))
+        assert np.all(err <= sc[:, None, None] / 2 + 1e-7)
+
+
+@pytest.mark.parametrize("nq", [1, 8, 29])
+def test_bucket_score_tiled_int8_vs_dequant_oracle(nq):
+    """The int8 tiled kernel (int8→bf16 operands, fp32 accumulation,
+    per-bucket scale on the score block) tracks the fp32 oracle over the
+    DEQUANTISED values: ids overlap near-perfectly and scores agree to the
+    kernel's bf16 query-cast tolerance."""
+    K, B, D, P, k = 12, 24, 64, 3, 8
+    ks = jax.random.split(jax.random.PRNGKey(nq + 100), 5)
+    docs = jax.random.normal(ks[0], (K * B, D)) / np.sqrt(D)
+    buckets = jax.random.permutation(ks[1], K * B).reshape(K, B)
+    buckets = jnp.where(
+        jax.random.uniform(ks[2], (K, B)) < 0.25, -1, buckets
+    ).astype(jnp.int32)
+    q = jax.random.normal(ks[3], (nq, D)) / np.sqrt(D)
+    probes = jax.random.randint(ks[4], (nq, P), 0, K)
+    ex = jnp.where(jnp.arange(nq) % 2 == 0, jnp.abs(buckets[0, 0]), -1
+                   ).astype(jnp.int32)
+
+    d8, i8, sc = pack_bucket_major(docs, buckets, dtype=jnp.int8)
+    assert d8.dtype == jnp.int8 and sc is not None
+    s_len = schedule_length(8, P, K)
+    sched, member = build_probe_schedule_device(probes, query_tile=8,
+                                                s_len=s_len)
+    s, i = bucket_score_tiled(q, d8, i8, sched, member, k=k, exclude=ex,
+                              scales=sc)
+    rs, ri = bucket_score_ref(q, d8, i8, probes, k, exclude=ex, scales=sc)
+    # scores: kernel casts the fp32 query to bf16; the oracle does not
+    finite = np.isfinite(np.asarray(rs))
+    np.testing.assert_allclose(
+        np.asarray(s)[finite], np.asarray(rs)[finite], atol=5e-3
+    )
+    overlap = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(np.asarray(i), np.asarray(ri))
+    ])
+    assert overlap >= 0.95, overlap
+
+
+def test_bucket_score_tiled_int8_requires_scales():
+    d8, i8, _ = pack_bucket_major(
+        jnp.ones((8, 4)), jnp.arange(8, dtype=jnp.int32).reshape(2, 4),
+        dtype=jnp.int8,
+    )
+    sched, member = build_probe_schedule(np.asarray([[0, 1]]), 8)
+    with pytest.raises(ValueError, match="scales"):
+        bucket_score_tiled(
+            jnp.ones((1, 4)), d8, i8, jnp.asarray(sched),
+            jnp.asarray(member), k=2,
+        )
+    with pytest.raises(ValueError, match="scales"):
+        bucket_score_ref(
+            jnp.ones((1, 4)), d8, i8, jnp.asarray([[0, 1]]), 2
+        )
+
+
 def test_pick_query_tile_respects_vmem_budget():
-    """QT solves QT·D + B·D + QT·B + 2·QT·k_pad <= budget words, clamped to
-    [8, max_tile] and a sublane multiple of 8."""
+    """QT solves QT·D + B·D·(itemsize/4) + QT·B + 2·QT·k_pad <= budget
+    words, clamped to [8, max_tile] and a sublane multiple of 8."""
     qt = pick_query_tile(512, 128, k_pad=64, budget_bytes=2**20)
     words = qt * 512 + 128 * 512 + qt * 128 + 2 * qt * 64
     assert words * 4 <= 2**20 and qt % 8 == 0 and qt >= 8
@@ -118,14 +225,61 @@ def test_pick_query_tile_respects_vmem_budget():
     assert pick_query_tile(64, 8, max_tile=32) == 32
 
 
+def test_pick_query_tile_reduced_pack_buys_larger_tile():
+    """The bucket-block term of the VMEM formula scales with the pack
+    itemsize: bf16 halves it and int8 quarters it, so at a budget the fp32
+    block nearly fills, the quantised packs free words for MORE queries per
+    tile (monotone in itemsize) while staying within budget."""
+    d, b, k_pad, budget = 512, 512, 64, 2**20
+    qts = {
+        sz: pick_query_tile(
+            d, b, k_pad=k_pad, budget_bytes=budget, max_tile=1024,
+            pack_itemsize=sz,
+        )
+        for sz in (4, 2, 1)
+    }
+    assert qts[1] >= qts[2] >= qts[4]
+    # the fp32 block alone fills this budget -> clamp floor; int8 frees 3/4
+    # of it and buys a real tile
+    assert qts[4] == 8 and qts[1] > qts[4]
+    for sz in (1, 2):                          # quantised packs stay in budget
+        qt = qts[sz]
+        words = qt * d + (b * d * sz) // 4 + qt * b + 2 * qt * k_pad
+        assert words * 4 <= budget
+
+
+def test_schedule_length_bucketing():
+    """Static S is the power-of-two ceiling of the tight per-tile bound
+    min(QT·P, n_buckets) — monotone in both arguments and never below a
+    tile's possible unique-bucket count."""
+    assert schedule_length(8, 6, 48) == 64           # QT·P=48 <= 48 -> 64
+    assert schedule_length(8, 6, 30) == 32           # capped by n_buckets
+    assert schedule_length(8, 1, 1000) == 8
+    assert schedule_length(1, 1, 1) == 1
+    assert schedule_length(16, 9, 10_000) == 256     # pow2ceil(144)
+    for qt, p, nb in [(8, 3, 20), (16, 6, 48), (8, 12, 36)]:
+        s = schedule_length(qt, p, nb)
+        assert s >= min(qt * p, nb) and (s & (s - 1)) == 0
+
+
 def test_pack_bucket_major_bf16_halves_bytes():
     """The bf16 pack stores the SAME layout at half the HBM bytes."""
     docs = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
     buckets = jnp.arange(64, dtype=jnp.int32).reshape(8, 8)
-    d32, i32 = pack_bucket_major(docs, buckets)
-    d16, i16 = pack_bucket_major(docs, buckets, dtype=jnp.bfloat16)
+    d32, i32, sc32 = pack_bucket_major(docs, buckets)
+    d16, i16, sc16 = pack_bucket_major(docs, buckets, dtype=jnp.bfloat16)
     assert d16.dtype == jnp.bfloat16 and d32.dtype == jnp.float32
     assert d16.nbytes * 2 == d32.nbytes
+    assert sc32 is None and sc16 is None
+    # int8: quarter the fp32 packed bytes, same layout, per-bucket scales
+    d8, i8_, sc8 = pack_bucket_major(docs, buckets, dtype=jnp.int8)
+    assert d8.dtype == jnp.int8 and d8.nbytes * 4 == d32.nbytes
+    assert np.array_equal(np.asarray(i8_), np.asarray(i32))
+    assert sc8.shape == (8,) and sc8.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(d8, np.float32) * np.asarray(sc8)[:, None, None],
+        np.asarray(d32), atol=float(np.max(np.asarray(sc8))) / 2 + 1e-7,
+    )
     assert np.array_equal(np.asarray(i16), np.asarray(i32))
     np.testing.assert_allclose(
         np.asarray(d16, np.float32), np.asarray(d32), atol=1e-2
@@ -194,7 +348,7 @@ def test_pack_bucket_major_roundtrip(random_corpus):
 
     idx = ClusterPruneIndex.build(docs, spec, 10, n_clusterings=1)
     buckets = jnp.where(idx.buckets[0] < docs.shape[0], idx.buckets[0], -1)
-    data, ids = pack_bucket_major(docs, buckets)
+    data, ids, _ = pack_bucket_major(docs, buckets)
     live = np.asarray(ids) >= 0
     gathered = np.asarray(data)[live]
     expected = np.asarray(docs)[np.asarray(ids)[live]]

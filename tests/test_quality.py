@@ -113,7 +113,7 @@ def test_quality_floors_bf16_pack(quality_setup):
 
     index, qids, cells = quality_setup
     bf16 = dataclasses.replace(index, bucket_data=None, pack_dtype="bfloat16")
-    data, _ = bf16.ensure_bucket_major()
+    data, _, _ = bf16.ensure_bucket_major()
     assert data.dtype == jnp.bfloat16
     engine = get_engine(bf16, "fused")
     for probes, cr_floor, nag_floor in QUALITY_FLOORS:
@@ -128,6 +128,97 @@ def test_quality_floors_bf16_pack(quality_setup):
             assert nag >= nag_floor, (
                 f"bf16 fused, probes={probes}, weight set {wi}: "
                 f"NAG {nag:.4f} fell below the {nag_floor} floor")
+
+
+@pytest.mark.slow
+def test_quality_floors_int8_pack_with_rescore(quality_setup):
+    """Quarter-precision bucket-major storage behind the exact-rescore tail
+    must stay above the SAME CR/NAG floors as fp32 and bf16 on the fused
+    backend: int8 quantisation perturbs which candidates surface (bounded
+    by the per-bucket scale), and the fp32 rescore of the top 3k fixes the
+    ordering — measured on this corpus the combination sits at fp32 quality
+    (CR min 5.88/7.31/8.66 at probes 6/12/24). Probing is untouched (fp32
+    leaders)."""
+    import dataclasses
+
+    index, qids, cells = quality_setup
+    i8 = dataclasses.replace(
+        index, bucket_data=None, bucket_scales=None, pack_dtype="int8"
+    )
+    data, _, scales = i8.ensure_bucket_major()
+    assert data.dtype == jnp.int8 and scales is not None
+    engine = get_engine(i8, "fused")
+    for probes, cr_floor, nag_floor in QUALITY_FLOORS:
+        for wi, (qw, gt_s, gt_i, far_s) in enumerate(cells):
+            s, ids, _ = engine.search(
+                qw, probes=probes, k=K_NN, exclude=qids, rescore=3 * K_NN
+            )
+            cr = float(jnp.mean(competitive_recall(ids, gt_i)))
+            nag = float(jnp.mean(
+                normalized_aggregate_goodness(s, gt_s, far_s)))
+            assert cr >= cr_floor, (
+                f"int8+rescore fused, probes={probes}, weight set {wi}: "
+                f"CR {cr:.3f} fell below the {cr_floor} floor")
+            assert nag >= nag_floor, (
+                f"int8+rescore fused, probes={probes}, weight set {wi}: "
+                f"NAG {nag:.4f} fell below the {nag_floor} floor")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quality_floors_with_rescore(quality_setup, backend):
+    """The exact-rescore tail can only re-rank candidates the pruned search
+    already surfaced — on an fp32 pack it must keep every backend above the
+    same pinned floors (it is an identity there), so a backend whose
+    rescore plumbing dropped candidates fails HERE."""
+    index, qids, cells = quality_setup
+    engine = get_engine(index, backend)
+    for probes, cr_floor, nag_floor in QUALITY_FLOORS:
+        qw, gt_s, gt_i, far_s = cells[0]
+        s, ids, _ = engine.search(
+            qw, probes=probes, k=K_NN, exclude=qids, rescore=2 * K_NN
+        )
+        cr = float(jnp.mean(competitive_recall(ids, gt_i)))
+        nag = float(jnp.mean(normalized_aggregate_goodness(s, gt_s, far_s)))
+        assert cr >= cr_floor, (
+            f"{backend}+rescore, probes={probes}: CR {cr:.3f} fell below "
+            f"the {cr_floor} floor")
+        assert nag >= nag_floor, (
+            f"{backend}+rescore, probes={probes}: NAG {nag:.4f} fell below "
+            f"the {nag_floor} floor")
+
+
+@pytest.mark.slow
+def test_pack_dtype_topk_overlap_floors(quality_setup):
+    """Storage precision may only perturb the retrieved set marginally:
+    mean top-k overlap of the fused backend against its own fp32 pack must
+    stay above pinned floors for bf16 and int8 (measured 0.997+ / 0.988+ on
+    this corpus; floors leave noise margin only)."""
+    import dataclasses
+
+    OVERLAP_FLOORS = {"bfloat16": 0.97, "int8": 0.95}
+    index, qids, cells = quality_setup
+    f32 = get_engine(index, "fused")
+    for pack, floor in OVERLAP_FLOORS.items():
+        twin = dataclasses.replace(
+            index, bucket_data=None, bucket_scales=None, pack_dtype=pack
+        )
+        eng = get_engine(twin, "fused")
+        for probes, _, _ in QUALITY_FLOORS:
+            for wi, (qw, _, _, _) in enumerate(cells):
+                _, i_ref, _ = f32.search(
+                    qw, probes=probes, k=K_NN, exclude=qids
+                )
+                _, i_out, _ = eng.search(
+                    qw, probes=probes, k=K_NN, exclude=qids
+                )
+                overlap = float(np.mean([
+                    len(set(a.tolist()) & set(b.tolist())) / K_NN
+                    for a, b in zip(np.asarray(i_ref), np.asarray(i_out))
+                ]))
+                assert overlap >= floor, (
+                    f"{pack} fused, probes={probes}, weight set {wi}: "
+                    f"top-{K_NN} overlap {overlap:.3f} fell below {floor}")
 
 
 @pytest.mark.slow
