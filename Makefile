@@ -1,4 +1,5 @@
-.PHONY: test test-fast serve bench bench-preprocess bench-throughput
+.PHONY: test test-fast serve bench bench-preprocess bench-throughput \
+	bench-loadtest
 
 # Tier-1 verify (ROADMAP.md) + serving/benchmark smokes (incl. add/remove)
 test:
@@ -23,3 +24,8 @@ bench-preprocess:
 # fp32/bf16/int8 bucket-major packs (labelled entries; interpret off-TPU)
 bench-throughput:
 	PYTHONPATH=src python -m benchmarks.throughput --scale quick
+
+# Async serving tier under load: closed-loop (fixed concurrency) + open-loop
+# (fixed arrival rate) vs the sequential one-by-one baseline
+bench-loadtest:
+	PYTHONPATH=src python -m benchmarks.loadtest --scale quick

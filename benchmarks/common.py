@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
-    """Median wall time of ``fn(*args)`` with block_until_ready."""
+def timed_all(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    """Per-repeat wall times of ``fn(*args)`` with block_until_ready."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kwargs))
     ts = []
@@ -20,6 +20,12 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
         out = fn(*args, **kwargs)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
+    return ts, out
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    """Median wall time of ``fn(*args)`` with block_until_ready."""
+    ts, out = timed_all(fn, *args, repeats=repeats, warmup=warmup, **kwargs)
     return float(np.median(ts)), out
 
 

@@ -1,0 +1,342 @@
+"""Serving-tier load test: open/closed-loop generators, QPS + p50/p99.
+
+The benchmark of record for the async micro-batching front
+(:mod:`repro.serving`). Three measurements over the SAME heterogeneous
+request mix (per-request Dirichlet weights, mixed ``(k, probes)``
+execution shapes — the paper's dynamic per-user setting):
+
+``sequential``
+    The pre-serving-tier baseline: one-by-one ``Retriever.search`` on a
+    fresh facade. This is what concurrent traffic used to get — every
+    request pays a full engine dispatch alone.
+``closed``
+    Closed-loop: ``concurrency`` workers, each submitting its next request
+    only after its previous one completes (classic saturation load). The
+    headline is achieved QPS vs the sequential baseline — micro-batching
+    must actually reach the engine's batched path to win.
+``open``
+    Open-loop: requests arrive on a fixed-rate schedule *regardless* of
+    completions (arrival-rate load, the honest way to measure latency
+    under a target QPS — closed loops self-throttle and hide queueing
+    collapse). Reports the latency split plus expiry/rejection counts
+    when a ``--deadline-ms`` budget or queue bound bites.
+
+Latencies are the per-request server-stamped split
+(``queue_wait_s`` / ``compute_s`` — see ``SearchResponse``), so the p99
+decomposes into "waited for the window/queue" vs "rode a batch through
+the engine". Results land in the ``serving`` section of
+``BENCH_query.json`` via ``benchmarks.run``. Off-TPU the fused backend is
+interpret-mode (correctness smoke, not a speed claim); entries carry
+``platform`` so CPU and TPU rows can never be compared by accident.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Retriever, SearchRequest
+from repro.launch.serve import build_retriever
+from repro.serving import DeadlineExceeded, Overloaded, SearchServer
+
+from .common import std_parser
+
+# Heterogeneous execution-shape mix: most traffic at the default operating
+# point, a minority shape (deeper k, tighter budget) riding alongside —
+# enough to exercise per-shape queues without shattering every batch.
+MIX_SHAPES = (
+    {"k": 10, "probes": 12},
+    {"k": 10, "probes": 12},
+    {"k": 10, "probes": 12},
+    {"k": 20, "probes": 8},
+)
+
+LOADTEST_SIZES = {
+    "quick": {"n_docs": 4_000, "n_requests": 192},
+    "ts1": {"n_docs": 20_000, "n_requests": 1_024},
+    "ts2": {"n_docs": 50_000, "n_requests": 2_048},
+}
+
+
+def make_mix(n_docs: int, spec, n: int, seed: int = 0,
+             backend: str | None = None) -> list[SearchRequest]:
+    """n unique more-like-this requests cycling through MIX_SHAPES."""
+    rng = np.random.default_rng(seed)
+    qids = rng.choice(n_docs, size=min(n, n_docs), replace=False)
+    w = rng.dirichlet([1.0] * spec.s, size=n).astype(np.float32)
+    return [
+        SearchRequest(
+            like=int(qids[i % len(qids)]),
+            weights=dict(zip(spec.names, map(float, w[i]))),
+            backend=backend,
+            **MIX_SHAPES[i % len(MIX_SHAPES)],
+        )
+        for i in range(n)
+    ]
+
+
+def _quantiles(xs) -> tuple[float, float]:
+    """(p50, p99) in milliseconds."""
+    if not len(xs):
+        return 0.0, 0.0
+    a = np.asarray(xs, np.float64) * 1e3
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+# ------------------------------------------------------------------ baselines
+def sequential_baseline(retriever: Retriever,
+                        requests: list[SearchRequest]) -> dict:
+    """One-by-one synchronous search: the no-serving-tier reference."""
+    lat = []
+    t_start = time.perf_counter()
+    for req in requests:
+        t0 = time.perf_counter()
+        retriever.search(req)
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_start
+    p50, p99 = _quantiles(lat)
+    return {
+        "mode": "sequential",
+        "n_requests": len(requests),
+        "qps": round(len(requests) / wall, 2),
+        "p50_ms": round(p50, 3),
+        "p99_ms": round(p99, 3),
+    }
+
+
+# ------------------------------------------------------------ loop generators
+async def closed_loop(server: SearchServer, requests: list[SearchRequest],
+                      concurrency: int,
+                      deadline_s: float | None = None) -> dict:
+    """Fixed-concurrency workers, next request only after the last answer."""
+    results: list = []
+    errors = {"expired": 0, "rejected": 0}
+    cursor = iter(requests)
+    t_start = time.perf_counter()
+
+    async def worker():
+        for req in cursor:
+            try:
+                resp = await server.submit(req, deadline_s=deadline_s)
+                results.append(resp)
+            except DeadlineExceeded:
+                errors["expired"] += 1
+            except Overloaded:
+                errors["rejected"] += 1
+
+    await asyncio.gather(
+        *(worker() for _ in range(min(concurrency, len(requests))))
+    )
+    wall = time.perf_counter() - t_start
+    return _loop_report("closed", results, errors, wall,
+                        concurrency=concurrency)
+
+
+async def open_loop(server: SearchServer, requests: list[SearchRequest],
+                    rate_qps: float,
+                    deadline_s: float | None = None) -> dict:
+    """Fixed arrival rate: submit on schedule, completions be damned."""
+    results: list = []
+    errors = {"expired": 0, "rejected": 0}
+    loop = asyncio.get_running_loop()
+
+    async def one(req):
+        try:
+            results.append(await server.submit(req, deadline_s=deadline_s))
+        except DeadlineExceeded:
+            errors["expired"] += 1
+        except Overloaded:
+            errors["rejected"] += 1
+
+    t_start = time.perf_counter()
+    t0 = loop.time()
+    tasks = []
+    for i, req in enumerate(requests):
+        delay = (t0 + i / rate_qps) - loop.time()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tasks.append(asyncio.create_task(one(req)))
+    await asyncio.gather(*tasks)
+    wall = time.perf_counter() - t_start
+    return _loop_report("open", results, errors, wall, rate_qps=rate_qps)
+
+
+def _loop_report(mode: str, results, errors, wall, **extra) -> dict:
+    lat = [r.latency_s for r in results]
+    qwait = [r.queue_wait_s for r in results]
+    comp = [r.compute_s for r in results]
+    batch = [r.batch_size for r in results]
+    p50, p99 = _quantiles(lat)
+    qw50, qw99 = _quantiles(qwait)
+    c50, c99 = _quantiles(comp)
+    return {
+        "mode": mode,
+        "n_requests": len(results) + sum(errors.values()),
+        "completed": len(results),
+        "qps": round(len(results) / wall, 2) if wall > 0 else 0.0,
+        "p50_ms": round(p50, 3),
+        "p99_ms": round(p99, 3),
+        "queue_wait_p50_ms": round(qw50, 3),
+        "queue_wait_p99_ms": round(qw99, 3),
+        "compute_p50_ms": round(c50, 3),
+        "compute_p99_ms": round(c99, 3),
+        "mean_batch": round(float(np.mean(batch)), 2) if batch else 0.0,
+        "expired": errors["expired"],
+        "rejected": errors["rejected"],
+        **extra,
+    }
+
+
+# ----------------------------------------------------------------- the runner
+async def _run_async(retriever, requests, *, concurrency, rate_qps,
+                     window_s, replicas, max_queue_depth, deadline_s,
+                     modes) -> list[dict]:
+    out = []
+    async with SearchServer(
+        retriever, window_s=window_s, replicas=replicas,
+        max_queue_depth=max_queue_depth,
+    ) as server:
+        # Warm the dominant batched traces (full max_batch per shape) so
+        # the measured loops price serving, not XLA compilation. The
+        # sequential baseline gets the same courtesy from its own warmup.
+        shapes_seen = {}
+        for req in requests:
+            shapes_seen.setdefault(retriever.exec_shape(req), req)
+        for req in shapes_seen.values():
+            warm = [req] * min(server.max_batch, len(requests))
+            await asyncio.gather(*(server.submit(r) for r in warm))
+        def flush_caches():
+            # the warmup (and each measured mode) answers requests FROM the
+            # mix: flush the facade caches so the next mode's answers come
+            # from the engine, not memoisation
+            for replica in server.pool.replicas:
+                replica._flush_request_caches()
+
+        flush_caches()
+        if "closed" in modes:
+            entry = await closed_loop(server, requests, concurrency,
+                                      deadline_s)
+            entry.update(window_ms=window_s * 1e3,
+                         max_batch=server.max_batch, replicas=replicas)
+            out.append(entry)
+        if "open" in modes:
+            flush_caches()
+            closed_qps = next(
+                (e["qps"] for e in out if e["mode"] == "closed"), None
+            )
+            rate = rate_qps or (
+                round(0.8 * closed_qps, 1) if closed_qps else 100.0
+            )
+            entry = await open_loop(server, requests, rate, deadline_s)
+            entry.update(window_ms=window_s * 1e3,
+                         max_batch=server.max_batch, replicas=replicas)
+            out.append(entry)
+        out_stats = server.stats.snapshot()
+    out.append({"mode": "server_stats", **out_stats})
+    return out
+
+
+def run(scale: str = "quick", seed: int = 0, *, backend: str = "auto",
+        concurrency: int = 64, rate_qps: float | None = None,
+        window_s: float = 0.002, replicas: int = 1,
+        max_queue_depth: int = 256, deadline_s: float | None = None,
+        n_docs: int | None = None, n_requests: int | None = None,
+        modes=("closed", "open")) -> list[dict]:
+    """Build, load-test, return labelled entries for BENCH_query.json."""
+    sz = LOADTEST_SIZES[scale]
+    n_docs = n_docs or sz["n_docs"]
+    n_requests = n_requests or sz["n_requests"]
+
+    from repro.core import pick_backend
+
+    picked = pick_backend() if backend in (None, "auto") else backend
+    retriever, docs, spec = build_retriever(
+        n_docs, backend=backend, seed=seed,
+        pack_major=True if picked == "fused" else None,
+    )
+    requests = make_mix(n_docs, spec, n_requests, seed=seed)
+    served = retriever.backend
+    platform = jax.default_backend()
+    print(f"\n# Loadtest — async serving tier vs sequential baseline "
+          f"(n={n_docs}, {n_requests} requests, backend={served}, "
+          f"platform={platform}; fused is interpret-mode off-TPU)")
+
+    # Sequential baseline on a FRESH facade: the served retriever's
+    # request/response caches must not answer for the engine.
+    base = Retriever(retriever.index, backend=served,
+                     default_probes=retriever.default_probes)
+    warm_shapes = {}
+    for req in requests:
+        warm_shapes.setdefault(base.exec_shape(req), req)
+    for req in warm_shapes.values():   # compile the single-request traces
+        base.search(req)
+    base._flush_request_caches()
+    seq = sequential_baseline(base, requests)
+    print(f"sequential: {seq['qps']:.1f} QPS, "
+          f"p50/p99 {seq['p50_ms']:.1f}/{seq['p99_ms']:.1f} ms")
+
+    entries = asyncio.run(_run_async(
+        retriever, requests, concurrency=concurrency, rate_qps=rate_qps,
+        window_s=window_s, replicas=replicas,
+        max_queue_depth=max_queue_depth, deadline_s=deadline_s,
+        modes=modes,
+    ))
+    for e in entries:
+        if e["mode"] == "closed":
+            e["speedup_vs_sequential"] = round(e["qps"] / seq["qps"], 2)
+            print(f"closed-loop (c={concurrency}): {e['qps']:.1f} QPS "
+                  f"({e['speedup_vs_sequential']:.2f}x sequential), "
+                  f"p50/p99 {e['p50_ms']:.1f}/{e['p99_ms']:.1f} ms "
+                  f"(wait {e['queue_wait_p50_ms']:.1f}/"
+                  f"{e['queue_wait_p99_ms']:.1f}, compute "
+                  f"{e['compute_p50_ms']:.1f}/{e['compute_p99_ms']:.1f}), "
+                  f"mean batch {e['mean_batch']:.1f}")
+        elif e["mode"] == "open":
+            print(f"open-loop ({e['rate_qps']:.1f} QPS offered): "
+                  f"{e['qps']:.1f} achieved, p50/p99 {e['p50_ms']:.1f}/"
+                  f"{e['p99_ms']:.1f} ms, expired={e['expired']} "
+                  f"rejected={e['rejected']}")
+    for e in entries:
+        e.setdefault("backend", served)
+        e.setdefault("platform", platform)
+    entries.insert(0, {**seq, "backend": served, "platform": platform})
+    return entries
+
+
+def main():
+    ap = std_parser(__doc__)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--docs", type=int, default=None,
+                    help="override the scale's corpus size")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the scale's request count")
+    ap.add_argument("--concurrency", type=int, default=64,
+                    help="closed-loop worker count")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop arrival rate in QPS (default: 0.8x the "
+                         "measured closed-loop QPS)")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="micro-batch window")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="parallel dispatch slots (ReplicaPool size)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (exercises expiry under "
+                         "open-loop overload)")
+    ap.add_argument("--mode", default="both",
+                    choices=("closed", "open", "both"))
+    args = ap.parse_args()
+    modes = ("closed", "open") if args.mode == "both" else (args.mode,)
+    run(args.scale, args.seed, backend=args.backend,
+        concurrency=args.concurrency, rate_qps=args.rate,
+        window_s=args.window_ms / 1e3, replicas=args.replicas,
+        deadline_s=(
+            None if args.deadline_ms is None else args.deadline_ms / 1e3
+        ),
+        n_docs=args.docs, n_requests=args.requests, modes=modes)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ table1  preprocessing time/space (clusterer seam + FPF vs k-means vs PODS07)
 fig1    query time + distance computations vs visited clusters
 table2  recall + NAG over the paper's 7 weight sets
 throughput  serving QPS vs batch size per backend (query-tiled fused path)
+loadtest async serving tier under load (closed/open loop, micro-batching)
 kernels Pallas-vs-oracle agreement + VMEM working sets
 roofline the dry-run roofline table (requires results/dryrun/)
 
@@ -39,13 +40,14 @@ def main() -> None:
         scale = sys.argv[sys.argv.index("--scale") + 1]
     t0 = time.time()
 
-    from . import fig1_querytime, kernels_bench, roofline_report
+    from . import fig1_querytime, kernels_bench, loadtest, roofline_report
     from . import table1_preprocessing, table2_quality, throughput
 
     pre = table1_preprocessing.run(scale)
     fig1 = fig1_querytime.run(scale)
     table2 = table2_quality.run(scale)
     thr = throughput.run(scale)
+    serving = loadtest.run(scale)
     kernels_bench.run()
     roofline_report.run()
 
@@ -66,6 +68,11 @@ def main() -> None:
         # pack_dtype, query_tile, rescore -> qps / ms_per_query), one per
         # measured configuration — the fused backend sweeps fp32/bf16/int8
         "throughput": thr,
+        # async serving tier under load: sequential baseline + closed-loop
+        # (fixed concurrency) + open-loop (fixed arrival rate) entries with
+        # QPS and p50/p99 latency split into queue_wait vs compute, plus a
+        # final server_stats snapshot (batch-size histogram, shed/expired)
+        "serving": serving,
     })
     print(f"\n# benchmarks done in {time.time() - t0:.1f}s (scale={scale})")
 

@@ -14,8 +14,14 @@ are a correctness smoke, not a speed claim (the reference backend is the
 honest CPU row).
 
 Every emitted entry is fully labelled (backend, batch, pack_dtype,
-query_tile, rescore) so BENCH_query.json rows stay comparable across runs
-without guessing which configuration produced them.
+query_tile, rescore, **platform**) so BENCH_query.json rows stay comparable
+across runs without guessing which configuration produced them — the
+platform tag (``jax.default_backend()``) keeps interpret-CPU rows from
+being compared against TPU rows by accident. Besides the mean-derived QPS,
+each entry reports **p50/p99 per-query latency** over the timing repeats
+(at small repeat counts the p99 is effectively the max — it exists to
+catch retrace/GC spikes a mean would launder, not to claim tail
+statistics).
 
 Measured at the engine seam (one ``engine.search`` call per batch — the
 same call ``Retriever._search_batch`` issues per execution-shape group), so
@@ -34,11 +40,12 @@ from repro.core import ClusterPruneIndex, available_backends, get_engine
 from repro.data import CorpusConfig, make_corpus
 from repro.kernels import pick_query_tile
 
-from .common import bench_sizes, std_parser, timed
+from .common import bench_sizes, std_parser, timed_all
 
 K_NN = 10
 PROBES = 12
 BATCH_SIZES = (1, 8, 64)
+REPEATS = 5
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -79,11 +86,12 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
     if backends is None:
         backends = available_backends()
 
+    platform = jax.default_backend()
     print(f"\n# Throughput — QPS vs batch size (n={sz['n_docs']}, "
           f"probes={PROBES}, k={K_NN}, rescore={rescore}, "
-          f"platform={jax.default_backend()}; fused is interpret-mode "
-          f"off-TPU)")
-    print("backend,pack_dtype,query_tile,batch,qps,ms_per_query")
+          f"platform={platform}; fused is interpret-mode off-TPU)")
+    print("backend,pack_dtype,query_tile,batch,qps,"
+          "p50_ms_per_query,p99_ms_per_query")
     entries = []
     for name in backends:
         dtypes = pack_dtypes if name == "fused" else (None,)
@@ -107,22 +115,30 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
                 qids = rng.choice(sz["n_docs"], bs, replace=False)
                 qw = docs[jnp.asarray(qids)]
                 ex = jnp.asarray(qids, jnp.int32)
-                t, _ = timed(
+                ts, _ = timed_all(
                     lambda e=engine, q=qw, x=ex: e.search(
                         q, probes=PROBES, k=K_NN, exclude=x,
                         rescore=rescore,
-                    )
+                    ),
+                    repeats=REPEATS,
                 )
+                per_query_ms = np.asarray(ts, np.float64) / bs * 1e3
+                t = float(np.median(ts))
                 entry = {
                     "backend": name, "batch": bs,
                     "qps": round(bs / t, 2),
                     "ms_per_query": round(t / bs * 1e3, 3),
+                    "p50_ms_per_query": round(
+                        float(np.percentile(per_query_ms, 50)), 3),
+                    "p99_ms_per_query": round(
+                        float(np.percentile(per_query_ms, 99)), 3),
                     "pack_dtype": label, "query_tile": qt,
-                    "rescore": rescore,
+                    "rescore": rescore, "platform": platform,
                 }
                 entries.append(entry)
                 print(f"{name},{label},{qt},{bs},{entry['qps']:.1f},"
-                      f"{entry['ms_per_query']:.3f}")
+                      f"{entry['p50_ms_per_query']:.3f},"
+                      f"{entry['p99_ms_per_query']:.3f}")
     return entries
 
 

@@ -17,9 +17,14 @@
 #                           int8 pack sweep are all exercised end to end,
 #                           plus a second pass that builds an int8-packed
 #                           index and serves every search through the
-#                           exact-rescore tail), so regressions anywhere
-#                           in the build->serve->mutate path fail CI, not
-#                           just unit tests
+#                           exact-rescore tail), the async micro-batching
+#                           serving tier (--serve: concurrent submits
+#                           through repro.serving with a hard id/score
+#                           parity check vs the synchronous path), and the
+#                           closed-loop serving load test (micro-batched
+#                           QPS vs the sequential baseline), so regressions
+#                           anywhere in the build->serve->mutate path fail
+#                           CI, not just unit tests
 #
 # Extra args are forwarded to pytest in both modes.
 set -euo pipefail
@@ -52,4 +57,10 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: int8 quantised pack + exact-rescore tail"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.throughput --scale quick --pack-dtype int8 --rescore 20
+  echo "[ci] smoke: async serving tier (micro-batching, parity vs one-by-one)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --serve --docs 2000 --queries 64
+  echo "[ci] smoke: serving load test (closed loop, reference backend)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.loadtest --scale quick --backend reference --mode closed
 fi

@@ -55,11 +55,13 @@ from .engine import (
 )
 from .calibrate import ProbeLadder, calibrate_index, isotonic_fit
 from .api import (
+    ExecShape,
     Hit,
     Retriever,
     SearchRequest,
     SearchResponse,
     decompose_scores,
+    exec_shape,
     plan_probes,
 )
 from .celldec import CellDecIndex, region_of, region_weights
@@ -74,6 +76,7 @@ from .metrics import (
 
 __all__ = [
     "SearchRequest", "SearchResponse", "Hit", "Retriever",
+    "ExecShape", "exec_shape",
     "plan_probes", "decompose_scores",
     "FieldSpec", "concat_fields", "normalize_fields", "split_fields",
     "aggregate_similarity", "cosine_distance", "expand_weights", "nwd",

@@ -56,7 +56,7 @@ import functools
 import math
 import time
 import warnings
-from typing import Iterable, Mapping, Sequence
+from typing import Callable, Iterable, Mapping, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,8 @@ __all__ = [
     "Hit",
     "SearchResponse",
     "Retriever",
+    "ExecShape",
+    "exec_shape",
     "plan_probes",
     "decompose_scores",
 ]
@@ -117,6 +119,58 @@ def plan_probes(
             break
     probes = math.ceil(frac * total)
     return max(n_clusterings, min(total, probes))
+
+
+# ------------------------------------------------------------ execution shape
+class ExecShape(NamedTuple):
+    """The grouping key for batchable requests — ONE engine call per shape.
+
+    Two requests can ride the same engine call exactly when they agree on
+    the serving backend, the realised probe budget, ``k`` and the rescore
+    depth (the engine's batch dimension covers everything else: query
+    vector, weights, exclude id). This is the single definition of that
+    contract — :meth:`Retriever._search_batch` groups a synchronous batch
+    by it and the async serving tier (:mod:`repro.serving`) keys its
+    micro-batching queues by it, so the two paths can never drift.
+    """
+
+    backend: str
+    probes: int
+    k: int
+    rescore: int | None
+
+
+def exec_shape(
+    req: SearchRequest,
+    *,
+    default_backend: str,
+    default_probes: int,
+    plan_target: Callable[[float], int] | None = None,
+) -> ExecShape:
+    """Resolve one request to its :class:`ExecShape` grouping key.
+
+    ``default_backend`` / ``default_probes`` fill in what the request leaves
+    unspecified (a retriever passes its own configuration). A
+    ``recall_target=`` request needs a planner to realise the budget —
+    ``plan_target`` maps the target to a probe count (a retriever passes its
+    calibrated/cached :meth:`Retriever._plan_target`); without one such a
+    request cannot be shaped and raises, rather than silently guessing a
+    budget the serving engine would then not use.
+    """
+    backend = req.backend or default_backend
+    if req.probes is not None:
+        probes = int(req.probes)
+    elif req.recall_target is not None:
+        if plan_target is None:
+            raise ValueError(
+                "request carries recall_target= but no plan_target planner "
+                "was given; resolve shapes through Retriever.exec_shape (or "
+                "pass plan_target=) so planned budgets match serving"
+            )
+        probes = int(plan_target(req.recall_target))
+    else:
+        probes = int(default_probes)
+    return ExecShape(backend, probes, req.k, req.rescore)
 
 
 # ---------------------------------------------------------------- the request
@@ -269,9 +323,18 @@ class SearchResponse:
     ``hits`` contains only valid results (short answers stay short);
     ``doc_ids`` / ``scores`` are the raw fixed-``k`` engine arrays (-1 /
     -inf padded) for metrics code that wants rectangular batches.
-    ``latency_s`` is the wall time of the engine call that served this
-    request's batch of ``batch_size`` requests; ``n_scored`` is this
-    request's own Fig-1 distance-computation count. ``predicted_recall`` is
+
+    Latency is attributed **per request**, split into the two components a
+    serving p99 is made of: ``queue_wait_s`` is how long THIS request
+    waited before its batch was dispatched (0 on the synchronous path —
+    there is no queue; the async tier stamps the measured wait), and
+    ``compute_s`` is the wall time of the engine call that served this
+    request's batch of ``batch_size`` requests (shared by the group: every
+    rider waits for the whole fused call). ``latency_s`` is their sum —
+    the request's own end-to-end latency, not the group's.
+
+    ``n_scored`` is this request's own Fig-1 distance-computation count.
+    ``predicted_recall`` is
     the planner's fitted CR/k estimate for the probe budget that served this
     request (from the index's calibrated ladder; the nominal target itself
     when the static fallback planned it; None when no prediction exists) —
@@ -283,11 +346,13 @@ class SearchResponse:
     doc_ids: np.ndarray      # (k,) int32, -1 padded
     scores: np.ndarray       # (k,) float32, -inf padded
     n_scored: int
-    latency_s: float
+    latency_s: float         # queue_wait_s + compute_s, per request
     backend: str
     probes: int
     batch_size: int
     predicted_recall: float | None = None
+    queue_wait_s: float = 0.0
+    compute_s: float = 0.0
 
     def __len__(self) -> int:
         return len(self.hits)
@@ -529,18 +594,30 @@ class Retriever:
             cache.popitem(last=False)
 
     # ------------------------------------------------------------- planning
-    def _plan(self, req: SearchRequest) -> tuple[str, int, float | None]:
-        """(backend name, probe budget, predicted recall) for one request."""
-        backend = req.backend or self.backend
-        if req.probes is not None:
-            probes = req.probes
-            predicted = self._predict_recall(probes)
-        elif req.recall_target is not None:
-            probes, predicted = self._plan_target(req.recall_target)
+    def exec_shape(self, req: SearchRequest) -> ExecShape:
+        """This request's :class:`ExecShape` under THIS retriever's config.
+
+        The module-level :func:`exec_shape` contract, with the retriever
+        supplying its default backend/probes and its calibrated (and
+        cached) ``recall_target`` planner. The async serving tier keys its
+        micro-batching queues off this, so a request lands in exactly the
+        queue whose flush `_search_batch` would have grouped it into.
+        """
+        return exec_shape(
+            req,
+            default_backend=self.backend,
+            default_probes=self.default_probes,
+            plan_target=lambda t: self._plan_target(t)[0],
+        )
+
+    def _plan(self, req: SearchRequest) -> tuple[ExecShape, float | None]:
+        """(execution shape, predicted recall) for one request."""
+        shape = self.exec_shape(req)
+        if req.recall_target is not None and req.probes is None:
+            predicted = self._plan_target(req.recall_target)[1]
         else:
-            probes = self.default_probes
-            predicted = self._predict_recall(probes)
-        return backend, probes, predicted
+            predicted = self._predict_recall(shape.probes)
+        return shape, predicted
 
     def _predict_recall(self, probes: int) -> float | None:
         """Fitted CR/k at an explicit budget — None without a ladder (the
@@ -685,9 +762,9 @@ class Retriever:
         plans = [self._plan(r) for r in mreqs]
 
         # Group by execution shape; each group is one engine call.
-        groups: dict[tuple[str, int, int, int | None], list[int]] = {}
-        for j, (r, (backend, probes, _)) in enumerate(zip(mreqs, plans)):
-            groups.setdefault((backend, probes, r.k, r.rescore), []).append(j)
+        groups: dict[ExecShape, list[int]] = {}
+        for j, (shape, _) in enumerate(plans):
+            groups.setdefault(shape, []).append(j)
 
         for (backend, probes, k, rescore), rows in groups.items():
             opts = self.engine_opts if backend == self.backend else {}
@@ -699,12 +776,14 @@ class Retriever:
                 qw, probes=probes, k=k, exclude=excl, rescore=rescore
             )
             jax.block_until_ready(scores)
-            dt = time.perf_counter() - t0
             fields = decompose_scores(qw, index.docs, ids, spec)
             scores_np = np.asarray(scores, np.float32)
             ids_np = np.asarray(ids, np.int32)
             n_np = np.asarray(n_scored, np.int32)
             fields_np = np.asarray(fields, np.float32)
+            # compute time covers everything the group's riders wait on:
+            # the engine call AND the shared decompose/host transfer.
+            dt = time.perf_counter() - t0
             for jj, j in enumerate(rows):
                 hits = tuple(
                     Hit(
@@ -727,7 +806,9 @@ class Retriever:
                     backend=engine.name,
                     probes=probes,
                     batch_size=len(rows),
-                    predicted_recall=plans[j][2],
+                    predicted_recall=plans[j][1],
+                    queue_wait_s=0.0,
+                    compute_s=dt,
                 )
                 i = miss[j]
                 out[i] = resp

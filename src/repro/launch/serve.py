@@ -21,7 +21,11 @@ honest, not nominal. ``--mutate N`` exercises the index's incremental
 maintenance mid-serve: N new documents are ingested through
 ``retriever.add`` (streamed into the padded buckets, NO rebuild), verified
 retrievable, then removed again and verified gone — the serving loop never
-restarts. The raw ``(scores, ids,
+restarts. ``--serve`` additionally drives the SAME requests through the
+async micro-batching tier (:mod:`repro.serving`) as concurrent submits and
+asserts the batched responses are id/score-identical to the synchronous
+one-by-one path — the end-to-end proof that micro-batching changes latency,
+never answers. The raw ``(scores, ids,
 n_scored)`` tuple surface lives only inside :mod:`repro.core.engine` — this
 driver speaks requests and responses exclusively. LM serving
 (prefill/decode) lives in examples/serve_lm.py; this driver is the paper's
@@ -51,7 +55,7 @@ from repro.core import (
 from repro.data import CorpusConfig, make_corpus
 
 __all__ = ["build_index", "build_retriever", "make_requests",
-           "serve_requests", "main"]
+           "serve_requests", "serve_async", "main"]
 
 
 def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
@@ -115,6 +119,33 @@ def serve_requests(retriever: Retriever, requests):
     return retriever.search(requests)
 
 
+def serve_async(retriever: Retriever, requests, *, window_s: float = 0.002,
+                replicas: int = 1, deadline_s: float | None = None):
+    """Drive requests through the async micro-batching tier.
+
+    Every request is submitted concurrently (the serving tier's intended
+    traffic shape — the micro-batch window coalesces them into engine-sized
+    batches). Returns ``(responses, stats_line)`` with responses in request
+    order; each response carries the per-request ``queue_wait_s`` /
+    ``compute_s`` latency split stamped by the server.
+    """
+    import asyncio
+
+    from repro.serving import SearchServer
+
+    async def _run():
+        async with SearchServer(retriever, window_s=window_s,
+                                replicas=replicas) as server:
+            resps = await asyncio.gather(
+                *(server.submit(r, deadline_s=deadline_s)
+                  for r in requests)
+            )
+            line = server.stats.format_line()
+        return list(resps), line
+
+    return asyncio.run(_run())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=20_000)
@@ -132,6 +163,15 @@ def main():
     ap.add_argument("--compare", action="store_true",
                     help="serve the same requests through every runnable "
                          "backend and report per-backend latency")
+    ap.add_argument("--serve", action="store_true",
+                    help="also drive the requests through the async "
+                         "micro-batching serving tier (repro.serving) as "
+                         "concurrent submits and verify id/score parity "
+                         "against the synchronous one-by-one path")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="--serve micro-batch window")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="--serve parallel dispatch slots")
     ap.add_argument("--mutate", type=int, default=0, metavar="N",
                     help="after serving, add N new documents through "
                          "retriever.add (incremental bucket maintenance, no "
@@ -232,6 +272,48 @@ def main():
         )
         print(f"[serve] sample hit for doc {int(qids[0])}: "
               f"doc {best.doc_id} score {best.score:.3f} ({parts})")
+
+    if args.serve:
+        # Async tier end to end: the same query set, submitted concurrently
+        # through the micro-batching front against the retriever's own
+        # backend (the compare loop may have left ``requests`` pinned to
+        # another). Flush the facade caches first — the sync pass above
+        # already answered these queries, and a cache hit would let the
+        # async path skip the engine entirely.
+        requests = make_requests(
+            qids, w, spec, k=args.k,
+            probes=None if args.recall_target is not None else args.probes,
+            recall_target=args.recall_target,
+        )
+        retriever._flush_request_caches()
+        t0 = time.time()
+        async_resps, stats_line = serve_async(
+            retriever, requests, window_s=args.window_ms / 1e3,
+            replicas=args.replicas,
+        )
+        dt = time.time() - t0
+        retriever._flush_request_caches()
+        one_by_one = [retriever.search(r) for r in requests]
+        mismatches = sum(
+            1 for a, b in zip(async_resps, one_by_one)
+            if list(a.doc_ids) != list(b.doc_ids)
+            or not np.allclose(a.scores, b.scores, rtol=1e-5, atol=1e-6)
+        )
+        waits = np.asarray([r.queue_wait_s for r in async_resps]) * 1e3
+        comps = np.asarray([r.compute_s for r in async_resps]) * 1e3
+        print(f"[serve] async tier: {len(requests)} concurrent submits in "
+              f"{dt * 1e3:.1f} ms (mean batch "
+              f"{np.mean([r.batch_size for r in async_resps]):.1f}, wait "
+              f"p50 {np.percentile(waits, 50):.1f} ms, compute p50 "
+              f"{np.percentile(comps, 50):.1f} ms)")
+        print(f"[serve] async stats: {stats_line}")
+        print(f"[serve] async parity vs one-by-one: {mismatches} "
+              f"mismatches ({'OK' if mismatches == 0 else 'FAIL'})")
+        if mismatches:
+            raise SystemExit(
+                f"[serve] async serving tier returned {mismatches} "
+                f"responses differing from the synchronous path"
+            )
 
     if len(report) > 1:
         print("\n[serve] per-backend latency (same index, same requests)")

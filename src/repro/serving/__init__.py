@@ -1,0 +1,81 @@
+"""repro.serving — async micro-batching serving tier over the Retriever.
+
+The engine's batched path (query-tiled fused kernel, one HBM read per
+shared bucket per tile) is only fast when requests reach it *in batches* —
+but real traffic is concurrent single requests. This package is the
+mechanism between the two: an asyncio front-end that accumulates incoming
+:class:`~repro.core.SearchRequest` objects in per-execution-shape queues
+(:func:`~repro.core.exec_shape` — the same ``(backend, probes, k,
+rescore)`` grouping ``Retriever.search`` applies to a synchronous batch),
+flushes each queue when its micro-batch window elapses or it reaches a
+query-tile multiple, and dispatches one engine call per flush on a replica
+thread — with deadline scheduling, priority-aware load shedding under
+bounded-queue backpressure, and an honest per-request latency split
+(``queue_wait_s`` vs ``compute_s``) on every response.
+
+Layout (policy/mechanism/loop kept separate, each independently testable):
+
+    batcher.py    per-shape FIFOs; window-or-size flush readiness
+    scheduler.py  typed failures + admission/expiry/ordering policy
+    server.py     SearchServer event loop, ReplicaPool, executor dispatch
+    stats.py      counters, batch-size histogram, p50/p99 wait/compute split
+
+Copy-paste usage::
+
+    import asyncio
+    from repro.core import Retriever, SearchRequest
+    from repro.serving import SearchServer, DeadlineExceeded, Overloaded
+
+    retriever = Retriever.build(docs, spec, k_clusters=64)
+
+    async def main():
+        async with SearchServer(
+            retriever,
+            window_s=0.002,       # micro-batch window: 2 ms
+            max_queue_depth=256,  # backpressure bound per shape queue
+            replicas=2,           # parallel dispatch slots
+        ) as server:
+            try:
+                resp = await server.submit(
+                    SearchRequest(like=7, k=10),
+                    deadline_s=0.05,  # fail fast if still queued at 50 ms
+                    priority=1,       # outranks priority-0 under shedding
+                )
+                print(resp.ids, resp.queue_wait_s, resp.compute_s)
+            except DeadlineExceeded:
+                ...               # expired in queue — engine never ran
+            except Overloaded:
+                ...               # rejected or shed: back off and retry
+            print(server.stats.format_line())
+
+    asyncio.run(main())
+
+Load-test the tier with ``python -m benchmarks.loadtest`` (open/closed
+loop, heterogeneous mixes, QPS + p50/p99 into ``BENCH_query.json``) or
+drive it end to end with ``python -m repro.launch.serve --serve``.
+"""
+
+from .batcher import Batcher, ShapeQueue
+from .scheduler import (
+    DeadlineExceeded,
+    Overloaded,
+    Scheduler,
+    ServingError,
+    Ticket,
+)
+from .server import ReplicaPool, SearchServer, default_max_batch
+from .stats import ServerStats
+
+__all__ = [
+    "SearchServer",
+    "ReplicaPool",
+    "default_max_batch",
+    "Batcher",
+    "ShapeQueue",
+    "Scheduler",
+    "Ticket",
+    "ServingError",
+    "DeadlineExceeded",
+    "Overloaded",
+    "ServerStats",
+]

@@ -1,0 +1,417 @@
+"""The async serving front: SearchServer event loop + ReplicaPool dispatch.
+
+:class:`SearchServer` is the piece that finally lets concurrent traffic
+reach the batched kernel at its efficient batch sizes. One asyncio task
+(the serving loop) owns all scheduling state; device work never runs on
+the event loop:
+
+    submit() ── exec_shape ──► ShapeQueue (per shape)      [batcher]
+                   │               │ window elapses OR batch hits the
+                   │               │ query-tile multiple
+            admission policy       ▼
+            (bounded queue,   flush_order (earliest deadline first)
+             priority shed)        │                      [scheduler]
+                   │               ▼
+              Overloaded      ReplicaPool.acquire ──► executor thread
+              DeadlineExceeded     │                  ONE Retriever.search
+                                   ▼                  per flushed batch
+                       SearchResponse (queue_wait_s / compute_s stamped)
+
+:class:`ReplicaPool` fans dispatch over N read-only :class:`Retriever`
+facades sharing ONE index (engines and the bucket-major pack are cached on
+the index itself, so replicas cost a facade, not a copy). Single-process
+today; the pool's acquire/release surface is the seam a multi-host tier
+replaces with remote replicas later.
+
+Every blocking engine call runs through ``loop.run_in_executor`` on a
+thread pool sized to the replica count, so the event loop keeps admitting,
+expiring and flushing while the device computes.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import contextlib
+import dataclasses
+import itertools
+
+from ..core.api import ExecShape, Retriever, SearchRequest, SearchResponse
+from .batcher import Batcher
+from .scheduler import (
+    DeadlineExceeded,
+    Overloaded,
+    Scheduler,
+    ServingError,
+    Ticket,
+)
+from .stats import ServerStats
+
+__all__ = ["SearchServer", "ReplicaPool", "default_max_batch"]
+
+
+def _engine_query_tile(retriever: Retriever) -> int | None:
+    """The fused kernel's query tile for this retriever, or None when the
+    serving backend does not tile (reference/sharded)."""
+    if retriever.backend != "fused":
+        return None
+    opt = retriever.engine_opts.get("query_tile")
+    if opt:
+        return int(opt)
+    from ..kernels.bucket_score.ops import pick_query_tile
+    from ..kernels.common import pad_to
+
+    index = retriever.index
+    data = index.bucket_data
+    if data is not None:
+        _, _, b, d = (int(x) for x in data.shape)
+        itemsize = data.dtype.itemsize
+    else:  # pack not materialised yet: size from the index's metadata
+        b = int(index.buckets.shape[-1])
+        d = int(index.docs.shape[-1])
+        itemsize = {"bfloat16": 2, "int8": 1}.get(
+            getattr(index, "pack_dtype", None) or "float32", 4
+        )
+    # k varies per request; size the tile for the default k=10 padded to
+    # the sublane multiple — max_batch is a flush trigger, not a contract.
+    return pick_query_tile(d, b, k_pad=pad_to(10, 8), pack_itemsize=itemsize)
+
+
+def default_max_batch(retriever: Retriever, floor: int = 64) -> int:
+    """Size-flush trigger: >= ``floor`` requests, rounded UP to a multiple
+    of the fused engine's query tile so a size-triggered flush dispatches
+    full MXU tiles (non-tiling backends just use the floor)."""
+    qt = _engine_query_tile(retriever)
+    if not qt:
+        return floor
+    return max(qt, -(-floor // qt) * qt)
+
+
+class ReplicaPool:
+    """N read-only retriever facades over ONE index, leased per flush.
+
+    Dispatch concurrency equals the pool size: a flush awaits a free
+    replica, runs its engine call on the executor, and returns the
+    replica. Replicas share the index (and with it every cached engine and
+    the bucket-major pack); each gets its own facade so per-facade state
+    (request/response caches, plan cache) is never contended across
+    threads. Lazy calibration is disabled on replicas — the index's ladder
+    is fitted (or not) once, by the primary, not raced by N threads.
+    """
+
+    def __init__(self, retriever: Retriever, n_replicas: int = 1):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.primary = retriever
+        self.replicas: list[Retriever] = [retriever] + [
+            Retriever(
+                retriever.index,
+                backend=retriever.backend,
+                default_probes=retriever.default_probes,
+                engine_opts=retriever.engine_opts,
+            )
+            for _ in range(n_replicas - 1)
+        ]
+        self._free: asyncio.Queue | None = None
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    def _ensure_queue(self) -> asyncio.Queue:
+        if self._free is None:
+            self._free = asyncio.Queue()
+            for r in self.replicas:
+                self._free.put_nowait(r)
+        return self._free
+
+    @contextlib.asynccontextmanager
+    async def acquire(self):
+        """Lease one replica (awaits until a dispatch slot frees up)."""
+        q = self._ensure_queue()
+        replica = await q.get()
+        try:
+            yield replica
+        finally:
+            q.put_nowait(replica)
+
+
+class SearchServer:
+    """Asyncio micro-batching front over one :class:`Retriever`.
+
+    ::
+
+        async with SearchServer(retriever, window_s=0.002) as server:
+            resp = await server.submit(
+                SearchRequest(like=7, k=10), deadline_s=0.05, priority=1
+            )
+
+    Knobs (see ROADMAP "Architecture: serving tier" for the full table):
+
+    ``window_s``
+        Micro-batch window: the hard bound on how long the oldest queued
+        request of a shape waits before its queue must flush.
+    ``max_batch``
+        Size-flush trigger and drain cap per dispatch. Defaults to
+        :func:`default_max_batch` — at least 64, rounded up to a multiple
+        of the fused engine's query tile.
+    ``max_queue_depth`` / ``shed_low_priority``
+        Backpressure: each shape queue is bounded; a full queue rejects
+        with :class:`Overloaded`, or (default) sheds its lowest-priority
+        waiter when the newcomer outranks it.
+    ``default_deadline_s``
+        Deadline applied to submits that don't carry their own (None =
+        requests without a deadline never expire).
+    ``replicas``
+        Dispatch parallelism (:class:`ReplicaPool` size).
+    ``log_interval_s``
+        When set, a background task prints one ``[serving]`` stats line
+        (counters + wait/compute/latency p50/p99 + queue depths) at this
+        period.
+    """
+
+    def __init__(
+        self,
+        retriever: Retriever,
+        *,
+        window_s: float = 0.002,
+        max_batch: int | None = None,
+        max_queue_depth: int = 256,
+        shed_low_priority: bool = True,
+        default_deadline_s: float | None = None,
+        replicas: int = 1,
+        log_interval_s: float | None = None,
+    ):
+        self.retriever = retriever
+        self.pool = ReplicaPool(retriever, replicas)
+        self.batcher = Batcher(
+            window_s=window_s,
+            max_batch=(
+                default_max_batch(retriever) if max_batch is None
+                else int(max_batch)
+            ),
+        )
+        self.scheduler = Scheduler(
+            max_queue_depth=max_queue_depth,
+            shed_low_priority=shed_low_priority,
+        )
+        self.stats = ServerStats()
+        self.default_deadline_s = default_deadline_s
+        self.log_interval_s = log_interval_s
+        self._seq = itertools.count()
+        self._wake: asyncio.Event | None = None
+        self._loop_task: asyncio.Task | None = None
+        self._log_task: asyncio.Task | None = None
+        self._inflight: set[asyncio.Task] = set()
+        self._executor: concurrent.futures.ThreadPoolExecutor | None = None
+        self._running = False
+        self._draining = False
+
+    @property
+    def max_batch(self) -> int:
+        return self.batcher.max_batch
+
+    # ------------------------------------------------------------- lifecycle
+    async def start(self) -> "SearchServer":
+        if self._running:
+            raise RuntimeError("server already started")
+        self._running = True
+        self._draining = False
+        self._wake = asyncio.Event()
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=len(self.pool), thread_name_prefix="repro-serve"
+        )
+        self._loop_task = asyncio.create_task(self._run())
+        if self.log_interval_s is not None:
+            self._log_task = asyncio.create_task(self._log_loop())
+        return self
+
+    async def stop(self, *, drain: bool = True) -> None:
+        """Stop serving. ``drain=True`` (default) flushes every queued
+        request through the engine first (windows are ignored — shutdown
+        is the flush); ``drain=False`` fails queued requests with
+        :class:`Overloaded`. In-flight dispatches always complete."""
+        if not self._running:
+            return
+        if not drain:
+            for q in self.batcher.nonempty():
+                for t in q.drain(len(q)):
+                    if t.fail(Overloaded("server stopped before dispatch")):
+                        self.stats.record_rejected()
+        self._draining = True
+        self._running = False
+        if self._wake is not None:
+            self._wake.set()
+        if self._loop_task is not None:
+            await self._loop_task
+            self._loop_task = None
+        while self._inflight:
+            pending = tuple(self._inflight)
+            self._inflight.difference_update(pending)
+            await asyncio.gather(*pending, return_exceptions=True)
+        if self._log_task is not None:
+            self._log_task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await self._log_task
+            self._log_task = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+    async def __aenter__(self) -> "SearchServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=True)
+
+    # ------------------------------------------------------------ submission
+    async def submit(
+        self,
+        request: SearchRequest,
+        *,
+        deadline_s: float | None = None,
+        priority: int = 0,
+    ) -> SearchResponse:
+        """Enqueue one request and await its response.
+
+        Raises :class:`Overloaded` when the shape's bounded queue refuses
+        admission, :class:`DeadlineExceeded` when the deadline passes
+        before the request's batch is dispatched (deadlines bound queue
+        time — a dispatched batch always completes and returns late
+        rather than wasting the device work).
+        """
+        if not self._running:
+            raise RuntimeError(
+                "server is not running (use `async with SearchServer(...)` "
+                "or await server.start())"
+            )
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline = None if deadline_s is None else now + deadline_s
+        if deadline is not None and deadline <= now:
+            self.stats.record_expired()
+            raise DeadlineExceeded(
+                f"deadline_s={deadline_s} already expired at submission"
+            )
+        shape = self.retriever.exec_shape(request)
+        ticket = Ticket(
+            request=request,
+            shape=shape,
+            future=loop.create_future(),
+            t_enqueue=now,
+            deadline=deadline,
+            priority=priority,
+            seq=next(self._seq),
+        )
+        try:
+            victim = self.scheduler.admit(self.batcher.queue(shape), ticket)
+        except Overloaded:
+            self.stats.record_rejected()
+            raise
+        if victim is not None:
+            self.stats.record_shed()
+        self.stats.record_submit()
+        self._wake.set()
+        return await ticket.future
+
+    # ---------------------------------------------------------- serving loop
+    async def _run(self) -> None:
+        # One invariant keeps batching adaptive under load: a queue is only
+        # DRAINED when a dispatch slot is free to take it. While every
+        # replica is busy, due queues keep accumulating — so batch sizes
+        # grow exactly when the system is saturated, instead of freezing at
+        # whatever the window caught and parking small batches in a line.
+        loop = asyncio.get_running_loop()
+        while True:
+            now = loop.time()
+            expired = self.scheduler.expire(self.batcher.nonempty(), now)
+            if expired:
+                self.stats.record_expired(len(expired))
+            capacity = len(self.pool) - len(self._inflight)
+            if capacity > 0:
+                ready = self.batcher.ready(now, flush_all=self._draining)
+                for q in self.scheduler.flush_order(ready)[:capacity]:
+                    tickets = q.drain(self.batcher.max_batch)
+                    if tickets:
+                        task = asyncio.create_task(self._dispatch(tickets))
+                        self._inflight.add(task)
+                        task.add_done_callback(self._dispatch_done)
+            if self._draining and not self.batcher.pending():
+                return
+            if len(self._inflight) >= len(self.pool):
+                # all dispatch slots busy: nothing to do until a dispatch
+                # completes (its done-callback wakes us) or a submit lands
+                timeout = None
+            elif self._draining:
+                timeout = 0.0      # shutdown ignores windows: keep flushing
+            else:
+                due = self.batcher.next_due()
+                timeout = (
+                    None if due is None else max(0.0, due - loop.time())
+                )
+            try:
+                await asyncio.wait_for(self._wake.wait(), timeout)
+            except asyncio.TimeoutError:
+                pass
+            self._wake.clear()
+
+    def _dispatch_done(self, task: asyncio.Task) -> None:
+        self._inflight.discard(task)
+        if self._wake is not None:
+            self._wake.set()       # a dispatch slot freed: flush-gate opens
+
+    async def _dispatch(self, tickets: list[Ticket]) -> None:
+        """One flushed batch -> one Retriever.search call off-loop."""
+        loop = asyncio.get_running_loop()
+        async with self.pool.acquire() as replica:
+            now = loop.time()
+            live = [t for t in tickets if not t.expired(now)]
+            dead = [t for t in tickets if t.expired(now)]
+            for t in dead:
+                t.fail(
+                    DeadlineExceeded(
+                        f"deadline passed while awaiting a dispatch slot "
+                        f"(waited {now - t.t_enqueue:.4f}s)"
+                    )
+                )
+            if dead:
+                self.stats.record_expired(len(dead))
+            if not live:
+                return
+            requests = [t.request for t in live]
+            t0 = loop.time()
+            try:
+                responses = await loop.run_in_executor(
+                    self._executor, replica.search, requests
+                )
+            except Exception as e:  # engine/search failure: fail the riders
+                self.stats.record_failed(len(live))
+                err = e if isinstance(e, ServingError) else ServingError(
+                    f"dispatch failed for shape {tuple(live[0].shape)}: {e!r}"
+                )
+                for t in live:
+                    t.fail(err)
+                return
+            t1 = loop.time()
+        compute = t1 - t0
+        waits = []
+        for t, resp in zip(live, responses):
+            wait = t0 - t.t_enqueue
+            waits.append(wait)
+            t.resolve(
+                dataclasses.replace(
+                    resp,
+                    queue_wait_s=wait,
+                    compute_s=compute,
+                    latency_s=wait + compute,
+                )
+            )
+        self.stats.record_batch(waits, compute)
+
+    async def _log_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.log_interval_s)
+            print("[serving] " + self.stats.format_line(
+                self.batcher.depths()
+            ))

@@ -301,6 +301,56 @@ def test_response_surface(retriever):
     assert np.all(np.diff(live) <= 1e-6)
 
 
+# ----------------------------------------------------- exec_shape + latency
+def test_exec_shape_resolution(retriever):
+    """The public grouping contract: retriever defaults fill unspecified
+    fields, explicit request fields win, recall_target needs a planner."""
+    from repro.core import ExecShape, exec_shape
+
+    shape = retriever.exec_shape(SearchRequest(like=1))
+    assert shape == ExecShape(
+        "reference", retriever.default_probes, 10, None
+    )
+    assert retriever.exec_shape(
+        SearchRequest(like=1, probes=7, k=4, backend="fused", rescore=8)
+    ) == ExecShape("fused", 7, 4, 8)
+    # module-level form: recall_target without a planner must raise, not
+    # guess a budget the serving engine would then not use
+    with pytest.raises(ValueError, match="plan_target"):
+        exec_shape(SearchRequest(like=1, recall_target=0.9),
+                   default_backend="reference", default_probes=6)
+    assert exec_shape(
+        SearchRequest(like=1, recall_target=0.9),
+        default_backend="reference", default_probes=6,
+        plan_target=lambda t: 11,
+    ) == ExecShape("reference", 11, 10, None)
+    # the shape IS the batch-grouping key _search_batch uses: requests
+    # sharing one shape ride one engine call
+    reqs = [SearchRequest(like=3, probes=6, k=5),
+            SearchRequest(like=4, probes=6, k=5),
+            SearchRequest(like=5, probes=9, k=5)]
+    shapes = [retriever.exec_shape(r) for r in reqs]
+    assert shapes[0] == shapes[1] != shapes[2]
+    out = retriever.search(reqs)
+    assert out[0].batch_size == 2 and out[2].batch_size == 1
+
+
+def test_latency_split_sync_path(retriever):
+    """Synchronous responses carry the per-request latency split: no queue
+    on this path (queue_wait_s == 0), compute is the group's shared engine
+    wall, and latency_s is exactly their sum."""
+    resps = retriever.search([
+        SearchRequest(like=31, probes=7, k=5),
+        SearchRequest(like=32, probes=7, k=5),
+    ])
+    for r in resps:
+        assert r.queue_wait_s == 0.0 and r.compute_s > 0
+        assert r.latency_s == pytest.approx(r.compute_s)
+    # riders of one group share the engine call they all waited on
+    assert resps[0].compute_s == resps[1].compute_s
+    assert resps[0].batch_size == 2
+
+
 # ------------------------------------------------- deprecated shim (qchunk)
 def test_index_search_qchunk_silent_drop_fixed(retriever, api_corpus):
     """qchunk with a non-reference backend raises instead of being ignored."""
