@@ -20,11 +20,17 @@
 #                           exact-rescore tail), the async micro-batching
 #                           serving tier (--serve: concurrent submits
 #                           through repro.serving with a hard id/score
-#                           parity check vs the synchronous path), and the
-#                           closed-loop serving load test (micro-batched
-#                           QPS vs the sequential baseline), so regressions
-#                           anywhere in the build->serve->mutate path fail
-#                           CI, not just unit tests
+#                           parity check vs the synchronous path), the
+#                           tiered retrieval paths (--exact: full-sweep
+#                           exact tier hard-checked against brute force,
+#                           also through the async micro-batcher;
+#                           --min-recall: calibrated recall-floor
+#                           escalation, floor checked on held-out
+#                           queries), and the closed-loop serving load
+#                           test (micro-batched QPS vs the sequential
+#                           baseline), so regressions anywhere in the
+#                           build->serve->mutate path fail CI, not just
+#                           unit tests
 #
 # Extra args are forwarded to pytest in both modes.
 set -euo pipefail
@@ -60,6 +66,13 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: async serving tier (micro-batching, parity vs one-by-one)"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --serve --docs 2000 --queries 64
+  echo "[ci] smoke: tiered exact retrieval (full sweep, brute-force parity)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --docs 2000 --queries 16 --exact --serve
+  echo "[ci] smoke: recall-floor escalation (calibrated ladder, exact ceiling)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --docs 2000 --queries 16 --probes 3 \
+      --min-recall 0.95
   echo "[ci] smoke: serving load test (closed loop, reference backend)"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.loadtest --scale quick --backend reference --mode closed

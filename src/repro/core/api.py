@@ -30,8 +30,8 @@ wrong one for users. This module is the seam between the two:
     ``retriever.search(request | [requests])`` resolves doc-id vs. vector
     queries, validates weights, plans probes, **batches heterogeneous
     requests** that share an execution shape ``(backend, probes, k,
-    rescore)`` into one engine call each, and decomposes scores on the way
-    out.
+    rescore, tier, min_recall)`` into one engine call each, and decomposes
+    scores on the way out.
     ``retriever.add(docs)`` / ``retriever.remove(ids)`` mutate the index
     in place (incremental bucket maintenance, no rebuild) and invalidate
     every retriever-level cache.
@@ -126,18 +126,29 @@ class ExecShape(NamedTuple):
     """The grouping key for batchable requests — ONE engine call per shape.
 
     Two requests can ride the same engine call exactly when they agree on
-    the serving backend, the realised probe budget, ``k`` and the rescore
-    depth (the engine's batch dimension covers everything else: query
-    vector, weights, exclude id). This is the single definition of that
-    contract — :meth:`Retriever._search_batch` groups a synchronous batch
-    by it and the async serving tier (:mod:`repro.serving`) keys its
-    micro-batching queues by it, so the two paths can never drift.
+    the serving backend, the realised probe budget, ``k``, the rescore
+    depth AND the retrieval tier (the engine's batch dimension covers
+    everything else: query vector, weights, exclude id). This is the
+    single definition of that contract — :meth:`Retriever._search_batch`
+    groups a synchronous batch by it and the async serving tier
+    (:mod:`repro.serving`) keys its micro-batching queues by it, so the
+    two paths can never drift.
+
+    ``tier`` is ``"approx"`` (the plain budgeted pass — including
+    ``min_recall=`` requests whose planned budget already predicts at or
+    above the floor, so they batch with unconstrained requests),
+    ``"exact"`` (all T·K buckets swept; ``probes`` is pinned to T·K), or
+    ``"escalate"`` (the prediction fell below the floor: the escalation
+    driver runs, and ``min_recall`` carries the floor so only requests
+    with the same floor share the engine call).
     """
 
     backend: str
     probes: int
     k: int
     rescore: int | None
+    tier: str = "approx"
+    min_recall: float | None = None
 
 
 def exec_shape(
@@ -146,6 +157,8 @@ def exec_shape(
     default_backend: str,
     default_probes: int,
     plan_target: Callable[[float], int] | None = None,
+    total_probes: int | None = None,
+    predict_recall: Callable[[int], float | None] | None = None,
 ) -> ExecShape:
     """Resolve one request to its :class:`ExecShape` grouping key.
 
@@ -156,8 +169,39 @@ def exec_shape(
     calibrated/cached :meth:`Retriever._plan_target`); without one such a
     request cannot be shaped and raises, rather than silently guessing a
     budget the serving engine would then not use.
+
+    ``"auto"`` (whether the request's or the default) resolves HERE to the
+    concrete backend name, so auto requests share a group with
+    default-backend requests instead of batching separately under the
+    literal string (which would also bypass the retriever's
+    ``engine_opts`` and cache a duplicate engine).
+
+    ``total_probes`` (= T·K; a retriever passes its index's) clamps
+    explicit budgets to the "probe everything = exact search" ceiling and
+    anchors the tier resolution: ``exact=True`` pins ``probes`` to it, and
+    a ``min_recall=`` request consults ``predict_recall`` — prediction at
+    or above the floor batches as plain ``"approx"``, below it the shape
+    carries the ``"escalate"`` tier and the floor, and with no predictor
+    at all (no calibrated ladder) only the exact tier can state the
+    guarantee, so the request resolves there.
     """
     backend = req.backend or default_backend
+    if backend == "auto":
+        backend = default_backend
+    if backend in (None, "auto"):
+        from .engine import pick_backend
+
+        backend = pick_backend()
+    if req.exact:
+        if total_probes is None:
+            raise ValueError(
+                "request carries exact=True but total_probes= (T*K) was not "
+                "given; resolve shapes through Retriever.exec_shape (or pass "
+                "total_probes=) so the exact tier pins the full sweep budget"
+            )
+        return ExecShape(
+            backend, int(total_probes), req.k, req.rescore, "exact", None
+        )
     if req.probes is not None:
         probes = int(req.probes)
     elif req.recall_target is not None:
@@ -170,6 +214,30 @@ def exec_shape(
         probes = int(plan_target(req.recall_target))
     else:
         probes = int(default_probes)
+    if total_probes is not None:
+        probes = min(probes, int(total_probes))
+    if req.min_recall is not None:
+        predicted = (
+            predict_recall(probes) if predict_recall is not None else None
+        )
+        if predicted is None:
+            # no ladder to predict with: only the exact tier can promise
+            # the floor, so that is where the request goes
+            if total_probes is None:
+                raise ValueError(
+                    "request carries min_recall= but no predict_recall "
+                    "predictor or total_probes= fallback was given; resolve "
+                    "shapes through Retriever.exec_shape so the floor can "
+                    "be guaranteed"
+                )
+            return ExecShape(
+                backend, int(total_probes), req.k, req.rescore, "exact", None
+            )
+        if float(predicted) < float(req.min_recall):
+            return ExecShape(
+                backend, probes, req.k, req.rescore, "escalate",
+                float(req.min_recall),
+            )
     return ExecShape(backend, probes, req.k, req.rescore)
 
 
@@ -205,6 +273,16 @@ class SearchRequest:
     before the final top-k cut — bounding quantised-storage noise
     (``pack_dtype="bfloat16"``/``"int8"``) at the cost of one extra
     gather+matmul, honestly charged to ``n_scored``.
+
+    Two tiered modes turn predictions into guarantees. ``exact=True``
+    sweeps ALL T·K buckets (the clustered exact pass) — the answer is the
+    true top-k, so a probe budget or a recall constraint alongside it is
+    an error. ``min_recall=r`` runs the planned approximate pass but
+    ESCALATES whenever the calibrated ladder predicts recall below ``r``
+    — re-running at the next calibrated rung, ultimately the exact tier —
+    with every tier's candidates charged to the response's ``n_scored``
+    and the answering tier stamped on the response. It composes with an
+    explicit ``probes=`` or ``recall_target=`` starting budget.
     """
 
     query: jnp.ndarray | np.ndarray | Sequence | None = None
@@ -216,6 +294,8 @@ class SearchRequest:
     exclude: int | None = None
     backend: str | None = None
     rescore: int | None = None
+    exact: bool = False
+    min_recall: float | None = None
 
     def __post_init__(self):
         if (self.query is None) == (self.like is None):
@@ -242,6 +322,23 @@ class SearchRequest:
         if self.rescore is not None and self.rescore < self.k:
             raise ValueError(
                 f"rescore depth must be >= k ({self.k}), got {self.rescore}"
+            )
+        if self.exact:
+            if self.probes is not None or self.recall_target is not None:
+                raise ValueError(
+                    "exact=True sweeps every cluster; a probes=/"
+                    "recall_target= budget alongside it is contradictory"
+                )
+            if self.min_recall is not None:
+                raise ValueError(
+                    "exact=True already guarantees recall 1.0; give either "
+                    "exact=True or min_recall=, not both"
+                )
+        if self.min_recall is not None and not (
+            0.0 < self.min_recall <= 1.0
+        ):
+            raise ValueError(
+                f"min_recall must be in (0, 1], got {self.min_recall}"
             )
 
     # ------------------------------------------------------------ resolution
@@ -280,6 +377,12 @@ class SearchRequest:
                 raise ValueError(
                     f"like={self.like} out of range for a corpus of "
                     f"{index.n_docs} documents"
+                )
+            removed = getattr(index, "removed", None)
+            if removed is not None and bool(removed[int(self.like)]):
+                raise ValueError(
+                    f"like={self.like} refers to a removed document; "
+                    "more-like-this cannot seed from a tombstoned doc"
                 )
             return index.docs[int(self.like)]
         q = self.query
@@ -333,13 +436,20 @@ class SearchResponse:
     rider waits for the whole fused call). ``latency_s`` is their sum —
     the request's own end-to-end latency, not the group's.
 
-    ``n_scored`` is this request's own Fig-1 distance-computation count.
+    ``n_scored`` is this request's own Fig-1 distance-computation count —
+    for an escalated request it is the CUMULATIVE count over every tier
+    that ran (the escalation really did score them all).
     ``predicted_recall`` is
     the planner's fitted CR/k estimate for the probe budget that served this
     request (from the index's calibrated ladder; the nominal target itself
     when the static fallback planned it; None when no prediction exists) —
     callers can audit the ``recall_target=`` promise against achieved
-    recall.
+    recall. ``tier`` names the tier that ANSWERED: ``"approx"`` (budgeted
+    pass, no floor pressure), ``"escalated"`` (a ``min_recall=`` floor
+    forced at least one re-run at a higher rung — ``escalations`` counts
+    them), or ``"exact"`` (the full T·K sweep answered, whether requested
+    via ``exact=True`` or reached as the escalation ceiling; its
+    ``predicted_recall`` is exactly 1.0 and ``probes`` is T·K).
     """
 
     hits: tuple[Hit, ...]
@@ -353,6 +463,8 @@ class SearchResponse:
     predicted_recall: float | None = None
     queue_wait_s: float = 0.0
     compute_s: float = 0.0
+    tier: str = "approx"
+    escalations: int = 0
 
     def __len__(self) -> int:
         return len(self.hits)
@@ -398,10 +510,10 @@ class Retriever:
 
     Owns one :class:`ClusterPruneIndex` and the (cached) engines over it.
     ``search`` accepts a single request or a heterogeneous batch; requests
-    sharing an execution shape ``(backend, probes, k, rescore)`` are served
-    by ONE engine call (the engine's batch dimension), others are grouped
-    into as few calls as their shapes allow, and responses come back in
-    request order.
+    sharing an execution shape ``(backend, probes, k, rescore, tier,
+    min_recall)`` are served by ONE engine call (the engine's batch
+    dimension), others are grouped into as few calls as their shapes
+    allow, and responses come back in request order.
     """
 
     # Cache bounds: FIFO-evicted OrderedDicts. qw rows are (D,) floats
@@ -585,6 +697,8 @@ class Retriever:
             req.exclude,
             req.backend or self.backend,
             req.rescore,
+            req.exact,
+            req.min_recall,
         )
 
     @staticmethod
@@ -598,22 +712,37 @@ class Retriever:
         """This request's :class:`ExecShape` under THIS retriever's config.
 
         The module-level :func:`exec_shape` contract, with the retriever
-        supplying its default backend/probes and its calibrated (and
-        cached) ``recall_target`` planner. The async serving tier keys its
+        supplying its default backend/probes, its calibrated (and cached)
+        ``recall_target`` planner, the index's T·K probe ceiling and its
+        ladder's recall predictor. The async serving tier keys its
         micro-batching queues off this, so a request lands in exactly the
         queue whose flush `_search_batch` would have grouped it into.
         """
+        if (
+            req.min_recall is not None
+            and self.calibrate
+            and (self.index.ladder is None
+                 or getattr(self.index, "ladder_stale", False))
+        ):
+            # same lazy-fit/refit policy recall_target= requests get: a
+            # min_recall floor deserves a measured predictor when the
+            # retriever opted into calibration, not a blanket exact tier
+            self._plan_target(req.min_recall)
         return exec_shape(
             req,
             default_backend=self.backend,
             default_probes=self.default_probes,
             plan_target=lambda t: self._plan_target(t)[0],
+            total_probes=self._tk[0] * self._tk[1],
+            predict_recall=self._predict_recall,
         )
 
     def _plan(self, req: SearchRequest) -> tuple[ExecShape, float | None]:
         """(execution shape, predicted recall) for one request."""
         shape = self.exec_shape(req)
-        if req.recall_target is not None and req.probes is None:
+        if shape.tier == "exact":
+            predicted = 1.0
+        elif req.recall_target is not None and req.probes is None:
             predicted = self._plan_target(req.recall_target)[1]
         else:
             predicted = self._predict_recall(shape.probes)
@@ -733,13 +862,22 @@ class Retriever:
         if todo:
             treqs = [mreqs[j] for j in todo]
             if all(r.like is not None for r in treqs):
-                bad = [r.like for r in treqs if int(r.like) >= index.n_docs]
+                likes = [int(r.like) for r in treqs]
+                bad = [l for l in likes if l >= index.n_docs]
                 if bad:
                     raise ValueError(
                         f"like={bad[0]} out of range for a corpus of "
                         f"{index.n_docs} documents"
                     )
-                q_all = index.docs[jnp.asarray([int(r.like) for r in treqs])]
+                removed = getattr(index, "removed", None)
+                if removed is not None:
+                    gone = [l for l in likes if bool(removed[l])]
+                    if gone:
+                        raise ValueError(
+                            f"like={gone[0]} refers to a removed document; "
+                            "more-like-this cannot seed from a tombstoned doc"
+                        )
+                q_all = index.docs[jnp.asarray(likes)]
             else:
                 q_all = jnp.stack([r.resolve_query(index) for r in treqs])
             w_rows = np.stack([r.resolve_weights(spec) for r in treqs])
@@ -766,15 +904,34 @@ class Retriever:
         for j, (shape, _) in enumerate(plans):
             groups.setdefault(shape, []).append(j)
 
-        for (backend, probes, k, rescore), rows in groups.items():
+        for shape, rows in groups.items():
+            backend, probes, k, rescore = (
+                shape.backend, shape.probes, shape.k, shape.rescore,
+            )
             opts = self.engine_opts if backend == self.backend else {}
             engine = get_engine(index, backend, **opts)
             qw = qw_all[jnp.asarray(rows)]
             excl = jnp.asarray(excl_all[rows])
             t0 = time.perf_counter()
-            scores, ids, n_scored = engine.search(
-                qw, probes=probes, k=k, exclude=excl, rescore=rescore
-            )
+            tier, escalations, pred_served = "approx", 0, None
+            if shape.tier == "exact":
+                scores, ids, n_scored = engine.search_exact(
+                    qw, k=k, exclude=excl, rescore=rescore
+                )
+                tier, pred_served = "exact", 1.0
+            elif shape.tier == "escalate":
+                scores, ids, n_scored, info = engine.search_escalating(
+                    qw, probes=probes, k=k, min_recall=shape.min_recall,
+                    exclude=excl, rescore=rescore,
+                )
+                tier = info["tier"]
+                escalations = info["escalations"]
+                probes = info["probes"]
+                pred_served = info["predicted_recall"]
+            else:
+                scores, ids, n_scored = engine.search(
+                    qw, probes=probes, k=k, exclude=excl, rescore=rescore
+                )
             jax.block_until_ready(scores)
             fields = decompose_scores(qw, index.docs, ids, spec)
             scores_np = np.asarray(scores, np.float32)
@@ -806,9 +963,14 @@ class Retriever:
                     backend=engine.name,
                     probes=probes,
                     batch_size=len(rows),
-                    predicted_recall=plans[j][1],
+                    predicted_recall=(
+                        pred_served if pred_served is not None
+                        else plans[j][1]
+                    ),
                     queue_wait_s=0.0,
                     compute_s=dt,
+                    tier=tier,
+                    escalations=escalations,
                 )
                 i = miss[j]
                 out[i] = resp

@@ -18,7 +18,11 @@ This module fits the ladder **per index**, on the index's own data:
 2. **Sweep** a probe grid through the engine seam
    (:func:`repro.core.engine.sweep_probes` — one engine, one bucket-major
    pack, reused across every level) and score each level's competitive
-   recall against :func:`repro.core.metrics.brute_force_topk` ground truth.
+   recall against ground truth from the SAME engine's exact tier
+   (``search_exact`` — the clustered full sweep, id-identical to
+   ``brute_force_topk`` on every backend): buckets already exclude
+   tombstones and quantised packs route through the fp32 rescore tail, so
+   no separate brute-force pass or live-mask bookkeeping is needed.
 3. **Fit** an isotonic (pool-adjacent-violators) regression of mean recall
    on probes. Monotonicity is a *property of the true curve* (more probes
    can only add candidates), so isotonising removes sampling noise without
@@ -214,13 +218,15 @@ def calibrate_index(
     ``Retriever._plan`` and ``ClusterPruneIndex.save`` pick it up, and
     resets the index's mutation-drift counter — a freshly fitted ladder is
     by definition not stale (see ``ClusterPruneIndex.ladder_stale``).
-    On a mutated index, queries are sampled from LIVE documents only and
-    tombstoned documents are masked out of the ground truth (they are
-    unreachable through the buckets, so counting them as misses would bias
-    the fitted curve down).
+    On a mutated index, queries are sampled from LIVE documents only;
+    ground truth comes from the engine's own exact tier, whose bucket
+    sweep can never surface a tombstoned document, so no separate
+    removed-mask bookkeeping is needed (and the curve stays unbiased).
     """
-    from .engine import sweep_probes
-    from .metrics import brute_force_topk, recall_fraction
+    from .engine import (
+        _SWEEP_GATHER_BYTES, get_engine, pick_backend, sweep_probes,
+    )
+    from .metrics import recall_fraction
     from .weights import weighted_query
 
     docs, spec = index.docs, index.spec
@@ -238,7 +244,6 @@ def calibrate_index(
         np.flatnonzero(~removed) if removed is not None
         else np.arange(index.n_docs)
     )
-    mask = jnp.asarray(~removed) if removed is not None else None
     nq = min(n_queries, live.size)
     qids = rng.choice(live, nq, replace=False)
     # Weight draws must cover the simplex CORNERS, not just its middle:
@@ -260,7 +265,23 @@ def calibrate_index(
     qw = weighted_query(q_all, w_all, spec)
     exclude = jnp.asarray(np.tile(qids, n_weight_draws), jnp.int32)
 
-    _, gt_ids = brute_force_topk(docs, qw, k, exclude=exclude, mask=mask)
+    # Ground truth from the exact tier of the SAME seam the sweep runs on:
+    # the clustered full sweep is id-identical to brute_force_topk (the
+    # quantised fused pack via its forced fp32 rescore), and its bucket
+    # walk can never surface a tombstoned doc. The reference backend's
+    # query chunk shrinks like sweep_probes' per-level rule, at the T·K
+    # budget, so the (qchunk, candidates, D) gather stays bounded.
+    name = pick_backend(index) if backend in (None, "auto") else backend
+    gt_opts = dict(engine_opts or {})
+    if name == "reference" and "qchunk" not in gt_opts:
+        b = int(index.buckets.shape[-1])
+        d = int(docs.shape[-1])
+        gt_opts["qchunk"] = int(max(
+            1, min(8, _SWEEP_GATHER_BYTES // max(1, t * kc * b * d * 4))
+        ))
+    _, gt_ids, _ = get_engine(index, name, **gt_opts).search_exact(
+        qw, k=k, exclude=exclude
+    )
 
     sweep = sweep_probes(
         index, qw, probe_grid=grid, k=k, exclude=exclude, backend=backend,

@@ -40,6 +40,19 @@ storage precision injected — the returned ORDER and SCORES are exact for
 the candidate set the pruned search surfaced — and the re-scored
 candidates are honestly charged to ``n_scored``.
 
+On top of the budgeted path every backend exposes the **tiered exact
+path** (``search_exact``): probe ALL T·K buckets, so every live document
+is a candidate and the result is the true top-k — the same clustering
+that prunes approximate search also organises exact search into
+best-first bucket blocks (Dimond & Sanders). Backends that score from a
+reduced-precision pack (``uses_packed_storage``) finish the exact tier
+through the fp32 rescore tail so returned ids/scores stay exact. The
+**escalation driver** (``search_escalating``) makes a calibrated recall
+floor a guarantee instead of a prediction: run the planned budget, and
+while the ladder's ``predicted_recall`` sits below the floor, re-run at
+the next calibrated rung — ultimately the exact tier — charging every
+tier's candidates cumulatively to ``n_scored``.
+
 Select a backend by name or let :func:`pick_backend` choose from the
 platform (TPU -> ``fused``, multi-device -> ``sharded``, else
 ``reference``)::
@@ -229,9 +242,19 @@ def sweep_probes(
     return out
 
 
+# Exact tier on a quantised pack: the pack proposes candidates, the fp32
+# rescore tail ranks them. A depth of a few k absorbs the storage noise.
+_EXACT_RESCORE_FACTOR = 4
+
+
 # --------------------------------------------------------------------- shared
 class _EngineBase:
     """Shared canonicalisation, probe selection and cost accounting."""
+
+    # True for backends that score from the (possibly bf16/int8) bucket-major
+    # pack rather than the fp32 doc-major corpus; the exact tier then routes
+    # through the fp32 rescore tail so returned ids/scores stay exact.
+    uses_packed_storage = False
 
     def __init__(self, index):
         self.index = index
@@ -261,8 +284,16 @@ class _EngineBase:
             return scores[0], ids[0], n_scored[0]
         return scores, ids, n_scored
 
+    def _total_probes(self) -> int:
+        """T·K — the budget at which pruned search degenerates to exact."""
+        t, k_clusters = (int(x) for x in self.index.counts.shape)
+        return t * k_clusters
+
     def _probes_t(self, probes: int) -> tuple[int, ...]:
-        return split_probes(probes, self.index.leaders.shape[0])
+        # Clamp to T·K: "probe everything" is exact search, and a larger
+        # budget would push top_k(lsims, p) past K into an opaque XLA error.
+        t = self.index.leaders.shape[0]
+        return split_probes(min(int(probes), self._total_probes()), t)
 
     def _flat_probes(self, nav, probes_t):
         """Navigate: (nq, P) flattened (t*K + cluster) probe list."""
@@ -287,6 +318,105 @@ class _EngineBase:
             jnp.sum(counts[flat_probes], axis=-1).astype(jnp.int32)
             + t * k_clusters
         )
+
+    def search_exact(self, qw, *, k, exclude=None, nav_query=None,
+                     rescore=None):
+        """Clustered exact top-k: sweep ALL T·K buckets best-first.
+
+        Every live document sits in a bucket of every clustering, so a
+        budget of T·K probes makes the candidate set the whole corpus and
+        the pruned machinery returns the true top-k (Dimond & Sanders:
+        the clustering that prunes approximate search also organises
+        exact search — leaders order buckets best-first, so the fused
+        path's running top-k bound tightens early). Backends scoring
+        from a bf16/int8 pack (``uses_packed_storage``) are forced
+        through the fp32 rescore tail at depth ``max(rescore, 4k)`` so
+        returned ids/scores match :func:`brute_force_topk` exactly.
+        """
+        quantised = self.uses_packed_storage and (
+            getattr(self.index, "pack_dtype", None) not in (None, "float32")
+        )
+        if quantised:
+            depth = max(int(rescore or 0), _EXACT_RESCORE_FACTOR * k)
+            rescore = max(k, min(depth, int(self.index.n_docs)))
+        return self.search(
+            qw, probes=self._total_probes(), k=k, exclude=exclude,
+            nav_query=nav_query, rescore=rescore,
+        )
+
+    def search_escalating(
+        self, qw, *, probes, k, min_recall, exclude=None, nav_query=None,
+        rescore=None,
+    ):
+        """Recall-floor escalation: approximate first, exact if needed.
+
+        Runs the planned budget; while the calibrated ladder predicts
+        recall below ``min_recall``, re-runs at the next calibrated rung —
+        the first one the fit says meets the floor, so one escalation
+        usually suffices — and at the exact tier once the rungs are
+        exhausted (immediately, when no ladder exists to predict with).
+        Every tier's candidates are charged cumulatively to ``n_scored``
+        — the escalation really did score them.
+
+        Returns ``(scores, ids, n_scored, info)`` where ``info`` carries
+        ``tier`` ("approx" | "escalated" | "exact"), ``escalations``,
+        the final ``probes`` and its ``predicted_recall``.
+        """
+        if not 0.0 < float(min_recall) <= 1.0:
+            raise ValueError(
+                f"min_recall must be in (0, 1], got {min_recall}"
+            )
+        ladder = getattr(self.index, "ladder", None)
+        total = self._total_probes()
+        qw2, nav, excl, single = self._canonical(qw, nav_query, exclude)
+        p = min(int(probes), total)
+        escalations = 0
+        n_total = None
+        while True:
+            if p >= total:
+                s, i, ns = self.search_exact(
+                    qw2, k=k, exclude=excl, nav_query=nav, rescore=rescore
+                )
+                predicted = 1.0
+            else:
+                s, i, ns = self.search(
+                    qw2, probes=p, k=k, exclude=excl, nav_query=nav,
+                    rescore=rescore,
+                )
+                predicted = (
+                    None if ladder is None
+                    else float(ladder.predicted_recall(p))
+                )
+            n_total = ns if n_total is None else n_total + ns
+            if p >= total or (
+                predicted is not None and predicted >= float(min_recall)
+            ):
+                break
+            nxt = total
+            if ladder is not None:
+                # first rung strictly above the budget just run, bumped to
+                # the rung the fit says meets the floor (ladder.plan) so
+                # the ladder is not climbed one wasted re-run at a time
+                above = next(
+                    (int(r) for r in ladder.probes if int(r) > p), total
+                )
+                nxt = min(
+                    max(above, int(ladder.plan(float(min_recall)))), total
+                )
+            p = nxt if nxt > p else total
+            escalations += 1
+        tier = (
+            "exact" if p >= total
+            else ("escalated" if escalations else "approx")
+        )
+        info = {
+            "tier": tier,
+            "escalations": escalations,
+            "probes": int(p),
+            "predicted_recall": float(predicted),
+        }
+        s, i, n_total = self._finish(single, s, i, n_total)
+        return s, i, n_total, info
 
     def _search_rescored(
         self, qw, *, probes, k, rescore, exclude=None, nav_query=None
@@ -466,6 +596,8 @@ class FusedEngine(_EngineBase):
     dedup win survives the static upper bound. Runs interpreted off-TPU
     (bit-compatible, slow — tests/CI only).
     """
+
+    uses_packed_storage = True
 
     def __init__(
         self,

@@ -17,7 +17,13 @@ the fixed ``--probes`` budget with a recall target served by the per-index
 calibrated planner (the index is calibrated right after build — sample
 queries x weight draws, probe sweep, isotonic fit), and the report prints
 the planner's predicted recall next to the achieved one, so the target is
-honest, not nominal. ``--mutate N`` exercises the index's incremental
+honest, not nominal. ``--exact`` serves every request through the clustered
+exact tier (all T·K buckets swept) and hard-checks the answers against
+brute force id-for-id; ``--min-recall r`` arms the recall-floor escalation
+— requests start at the ``--probes`` budget and re-run at higher calibrated
+rungs (ultimately the exact tier) whenever predicted recall sits below the
+floor, with the tier histogram and escalation count printed next to the
+achieved recall. ``--mutate N`` exercises the index's incremental
 maintenance mid-serve: N new documents are ingested through
 ``retriever.add`` (streamed into the padded buckets, NO rebuild), verified
 retrievable, then removed again and verified gone — the serving loop never
@@ -95,20 +101,27 @@ def build_retriever(n_docs: int = 20_000, *, backend: str = "auto",
 
 def make_requests(qids, weights, spec, *, probes: int | None = None,
                   k: int = 10, recall_target: float | None = None,
-                  backend: str | None = None) -> list[SearchRequest]:
+                  backend: str | None = None, exact: bool = False,
+                  min_recall: float | None = None) -> list[SearchRequest]:
     """Per-user more-like-this requests with field-name weights.
 
     One request per query document id; each carries its own dynamic weight
     dict (the paper's per-query user weights). MLT requests self-exclude
     automatically. Give either an explicit ``probes`` budget or a
-    ``recall_target`` the retriever's calibrated planner maps to one.
+    ``recall_target`` the retriever's calibrated planner maps to one —
+    or ``exact=True`` for the full-sweep exact tier (any budget args are
+    ignored: the tier pins its own). ``min_recall`` arms the recall-floor
+    escalation on every request.
     """
     weights = np.asarray(weights, np.float32)
+    if exact:
+        probes = recall_target = min_recall = None
     return [
         SearchRequest(
             like=int(qid),
             weights=dict(zip(spec.names, map(float, w))),
             probes=probes, k=k, recall_target=recall_target, backend=backend,
+            exact=exact, min_recall=min_recall,
         )
         for qid, w in zip(np.asarray(qids), weights)
     ]
@@ -155,6 +168,16 @@ def main():
                     help="plan probes from a recall target via the per-index "
                          "calibrated ladder (overrides --probes; the index "
                          "is calibrated after build)")
+    ap.add_argument("--exact", action="store_true",
+                    help="serve every request through the exact tier (all "
+                         "T*K buckets swept); the report hard-checks the "
+                         "answers against brute force id-for-id")
+    ap.add_argument("--min-recall", type=float, default=None,
+                    help="recall floor: requests run at the --probes budget "
+                         "but ESCALATE through the calibrated ladder rungs "
+                         "(ultimately the exact tier) whenever predicted "
+                         "recall falls below the floor; the index is "
+                         "calibrated after build")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto",
@@ -178,6 +201,10 @@ def main():
                          "rebuild), verify they are retrievable, then remove "
                          "them and verify they are gone")
     args = ap.parse_args()
+    if args.exact and (args.recall_target is not None
+                       or args.min_recall is not None):
+        ap.error("--exact already guarantees recall 1.0; it cannot combine "
+                 "with --recall-target or --min-recall")
 
     # Materialise the bucket-major layout at build time whenever the fused
     # backend may serve — the engine would otherwise do it on first search.
@@ -193,7 +220,7 @@ def main():
           f"(K={index.leaders.shape[1]}, T={index.leaders.shape[0]}"
           f"{', bucket-major packed' if index.bucket_data is not None else ''})")
 
-    if args.recall_target is not None:
+    if args.recall_target is not None or args.min_recall is not None:
         from repro.core import calibrate_index
 
         t0 = time.time()
@@ -225,14 +252,19 @@ def main():
     report = []
     sample = None
     for name in backends:
-        if args.recall_target is not None:
+        if args.exact:
+            requests = make_requests(
+                qids, w, spec, k=args.k, backend=name, exact=True,
+            )
+        elif args.recall_target is not None:
             requests = make_requests(
                 qids, w, spec, recall_target=args.recall_target, k=args.k,
-                backend=name,
+                backend=name, min_recall=args.min_recall,
             )
         else:
             requests = make_requests(
                 qids, w, spec, probes=args.probes, k=args.k, backend=name,
+                min_recall=args.min_recall,
             )
         try:
             responses = serve_requests(retriever, requests)
@@ -264,6 +296,35 @@ def main():
         print(f"[serve] backend={served}: recall@{args.k} = "
               f"{cr:.2f}/{args.k}, NAG = {nag:.4f}, "
               f"scored {frac:.1%} of corpus{planner}")
+        if args.exact or args.min_recall is not None:
+            tiers: dict[str, int] = {}
+            for resp in responses:
+                tiers[resp.tier] = tiers.get(resp.tier, 0) + 1
+            esc = sum(resp.escalations for resp in responses)
+            print(f"[serve] backend={served}: tiers {tiers}, "
+                  f"{esc} escalations")
+        if args.exact:
+            # exact tier contract: id-for-id identical to brute force
+            wrong = int(np.sum(np.any(ids != np.asarray(gt_i), axis=-1)))
+            print(f"[serve] backend={served}: exact-tier parity vs brute "
+                  f"force: {wrong} mismatches "
+                  f"({'OK' if wrong == 0 else 'FAIL'})")
+            if wrong:
+                raise SystemExit(
+                    f"[serve] exact tier returned {wrong} answers "
+                    f"differing from brute force"
+                )
+        if args.min_recall is not None:
+            achieved = cr / args.k
+            ok = achieved >= args.min_recall - 0.05   # held-out queries
+            print(f"[serve] backend={served}: recall floor "
+                  f"{args.min_recall:.2f}: achieved {achieved:.2f} "
+                  f"({'OK' if ok else 'FAIL'})")
+            if not ok:
+                raise SystemExit(
+                    f"[serve] min-recall floor {args.min_recall} missed: "
+                    f"achieved {achieved:.2f} on held-out queries"
+                )
 
     if sample is not None and sample.hits:
         best = sample.hits[0]
@@ -282,8 +343,10 @@ def main():
         # async path skip the engine entirely.
         requests = make_requests(
             qids, w, spec, k=args.k,
-            probes=None if args.recall_target is not None else args.probes,
+            probes=(None if args.recall_target is not None or args.exact
+                    else args.probes),
             recall_target=args.recall_target,
+            exact=args.exact, min_recall=args.min_recall,
         )
         retriever._flush_request_caches()
         t0 = time.time()

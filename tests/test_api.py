@@ -472,3 +472,306 @@ def test_stale_ladder_refit_with_calibrate(api_corpus):
     assert retriever.index.ladder is not first_ladder   # refit
     assert retriever.index.n_mutations == 0
     assert not retriever.index.ladder_stale
+
+
+# ------------------------------------------------------------ tiered requests
+def test_tier_request_validation():
+    with pytest.raises(ValueError, match="contradictory"):
+        SearchRequest(like=3, exact=True, probes=6)
+    with pytest.raises(ValueError, match="contradictory"):
+        SearchRequest(like=3, exact=True, recall_target=0.9)
+    with pytest.raises(ValueError, match="not both"):
+        SearchRequest(like=3, exact=True, min_recall=0.9)
+    with pytest.raises(ValueError, match="min_recall"):
+        SearchRequest(like=3, min_recall=1.5)
+    with pytest.raises(ValueError, match="min_recall"):
+        SearchRequest(like=3, min_recall=0.0)
+    # legal combinations: exact alone, min_recall with a starting budget
+    assert SearchRequest(like=3, exact=True).exact
+    assert SearchRequest(like=3, probes=4, min_recall=0.9).min_recall == 0.9
+    assert SearchRequest(like=3, recall_target=0.8, min_recall=0.9).k == 10
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_exact_tier_through_retriever(retriever, api_corpus, backend):
+    """SearchRequest(exact=True): brute-force-identical answers on every
+    backend, tier/probes/predicted_recall stamped honestly."""
+    from repro.core import brute_force_topk
+
+    docs, spec = api_corpus
+    rng = np.random.default_rng(5)
+    qids = rng.choice(docs.shape[0], 8, replace=False)
+    wmat = rng.dirichlet([1.0] * spec.s, 8).astype(np.float32)
+    reqs = [
+        SearchRequest(like=int(q),
+                      weights=dict(zip(spec.names, map(float, w))),
+                      exact=True, k=10, backend=backend)
+        for q, w in zip(qids, wmat)
+    ]
+    responses = retriever.search(reqs)
+    qw = weighted_query(docs[qids], jnp.asarray(wmat), spec)
+    gt_s, gt_i = brute_force_topk(
+        docs, qw, 10, exclude=jnp.asarray(qids, jnp.int32)
+    )
+    assert np.array_equal(
+        np.stack([r.doc_ids for r in responses]), np.asarray(gt_i)
+    ), backend
+    np.testing.assert_allclose(
+        np.stack([r.scores for r in responses]), np.asarray(gt_s), atol=1e-5
+    )
+    t, kc = retriever._tk
+    for r in responses:
+        assert r.tier == "exact" and r.escalations == 0
+        assert r.probes == t * kc
+        assert r.predicted_recall == 1.0
+        assert r.batch_size == len(reqs)
+
+
+def test_exact_tier_shape_and_batching(retriever):
+    """exact requests resolve to the pinned full-sweep shape, group with
+    each other, and stay separate from budgeted requests."""
+    from repro.core import ExecShape
+
+    t, kc = retriever._tk
+    sh = retriever.exec_shape(SearchRequest(like=1, exact=True))
+    assert sh == ExecShape("reference", t * kc, 10, None, "exact", None)
+    out = retriever.search([
+        SearchRequest(like=3, exact=True, k=5),
+        SearchRequest(like=4, exact=True, k=5),
+        SearchRequest(like=5, probes=6, k=5),
+    ])
+    assert out[0].batch_size == 2 and out[1].batch_size == 2
+    assert out[2].batch_size == 1 and out[2].tier == "approx"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_oversized_probes_clamped(retriever, api_corpus, backend):
+    """Regression: probes= past T*K used to die in the engine with an
+    opaque XLA error; it now clamps to the probe-everything budget at
+    shape resolution on every backend."""
+    t, kc = retriever._tk
+    sh = retriever.exec_shape(SearchRequest(like=1, probes=10_000))
+    assert sh.probes == t * kc and sh.tier == "approx"
+    resp = retriever.search(
+        SearchRequest(like=9, probes=10_000, k=5, backend=backend))
+    full = retriever.search(
+        SearchRequest(like=9, probes=t * kc, k=5, backend=backend))
+    assert resp.probes == t * kc
+    assert np.array_equal(resp.doc_ids, full.doc_ids), backend
+
+
+def test_auto_backend_resolves_in_shape(api_corpus):
+    """Regression: backend="auto" used to leak the literal string into
+    ExecShape — batching separately from default requests, dropping
+    engine_opts, and caching a duplicate engine under the "auto" key."""
+    docs, spec = api_corpus
+    retriever = Retriever.build(
+        docs[:600], spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), backend="reference",
+        engine_opts={"qchunk": 4},
+    )
+    sh_auto = retriever.exec_shape(SearchRequest(like=1, backend="auto"))
+    sh_none = retriever.exec_shape(SearchRequest(like=1))
+    assert sh_auto == sh_none and sh_auto.backend == "reference"
+    # one engine call for the pair, not two
+    out = retriever.search([
+        SearchRequest(like=3, probes=6, k=5, backend="auto"),
+        SearchRequest(like=4, probes=6, k=5),
+    ])
+    assert out[0].batch_size == 2 and out[1].batch_size == 2
+    assert out[0].backend == "reference"
+    # engine_opts reached the engine (no duplicate under "auto", no
+    # opts-less default engine built for the auto request)
+    cached = list(getattr(retriever.index, "_engines", {}))
+    assert ("reference", (("qchunk", 4),)) in cached
+    assert not any(name == "auto" for name, _ in cached)
+    assert ("reference", ()) not in cached
+
+
+def test_min_recall_without_ladder_serves_exact(api_corpus):
+    """No calibrated ladder => no prediction can state the floor; the
+    request is served by the exact tier (guarantee over guesswork)."""
+    docs, spec = api_corpus
+    retriever = Retriever.build(
+        docs[:600], spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), backend="reference",
+    )
+    assert retriever.index.ladder is None
+    sh = retriever.exec_shape(SearchRequest(like=1, min_recall=0.9))
+    t, kc = retriever._tk
+    assert sh.tier == "exact" and sh.probes == t * kc
+    resp = retriever.search(SearchRequest(like=5, min_recall=0.9, k=5))
+    assert resp.tier == "exact" and resp.predicted_recall == 1.0
+
+
+@pytest.fixture()
+def calibrated_retriever(api_corpus):
+    """Function-scoped retriever with a fitted (tiny) probe ladder."""
+    from repro.core import calibrate_index
+
+    docs, spec = api_corpus
+    r = Retriever.build(
+        docs[:600], spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0), backend="reference",
+    )
+    calibrate_index(r.index, n_queries=16, n_weight_draws=2,
+                    probe_grid=(3, 6, 12, 24), seed=2)
+    return r, docs, spec
+
+
+def test_min_recall_escalates_and_meets_floor(calibrated_retriever):
+    """A floor the planned budget's prediction cannot meet escalates, is
+    achieved on the calibration corpus, and charges cumulative n_scored."""
+    from repro.core import brute_force_topk, recall_fraction
+
+    retriever, docs, spec = calibrated_retriever
+    ladder = retriever.index.ladder
+    floor = min(1.0, float(ladder.recall[-1]))      # reachable by rungs
+    assert float(ladder.predicted_recall(3)) < floor
+    rng = np.random.default_rng(7)
+    qids = rng.choice(600, 16, replace=False)
+    reqs = [SearchRequest(like=int(q), probes=3, min_recall=floor, k=10)
+            for q in qids]
+    responses = retriever.search(reqs)
+    for r in responses:
+        assert r.tier in ("escalated", "exact")
+        assert r.escalations >= 1
+        assert r.predicted_recall >= floor
+    # honest cumulative accounting: strictly more than one pass at the
+    # final budget
+    single = retriever.search(
+        SearchRequest(like=int(qids[0]), probes=responses[0].probes, k=10))
+    assert responses[0].n_scored > single.n_scored
+    # the floor is met on achieved recall (mean over the query draw)
+    qw = weighted_query(
+        docs[jnp.asarray(qids)],
+        jnp.full((len(qids), spec.s), 1.0 / spec.s), spec,
+    )
+    _, gt_i = brute_force_topk(
+        docs[:600], qw, 10, exclude=jnp.asarray(qids, jnp.int32))
+    ids = jnp.asarray(np.stack([r.doc_ids for r in responses]))
+    achieved = float(jnp.mean(recall_fraction(ids, gt_i)))
+    assert achieved >= floor - 0.05, (achieved, floor)
+
+
+def test_min_recall_met_floor_batches_as_approx(calibrated_retriever):
+    """A floor the planned budget already satisfies stays tier "approx"
+    and shares the engine call with unconstrained requests."""
+    retriever, docs, spec = calibrated_retriever
+    ladder = retriever.index.ladder
+    top = int(ladder.probes[-1])
+    floor = float(ladder.predicted_recall(top)) - 0.05
+    assert 0.0 < floor <= 1.0
+    sh_floor = retriever.exec_shape(
+        SearchRequest(like=1, probes=top, min_recall=floor))
+    sh_plain = retriever.exec_shape(SearchRequest(like=2, probes=top))
+    assert sh_floor == sh_plain and sh_floor.tier == "approx"
+    out = retriever.search([
+        SearchRequest(like=3, probes=top, min_recall=floor, k=5),
+        SearchRequest(like=4, probes=top, k=5),
+    ])
+    assert out[0].batch_size == 2 and out[0].tier == "approx"
+    assert out[0].escalations == 0
+
+
+def test_tier_fields_in_response_cache_key(calibrated_retriever):
+    """exact / min_recall are part of request identity: the same like= must
+    not alias across tiers in the response cache."""
+    retriever, docs, spec = calibrated_retriever
+    plain = retriever.search(SearchRequest(like=11, probes=3, k=5))
+    exact = retriever.search(SearchRequest(like=11, exact=True, k=5))
+    floored = retriever.search(
+        SearchRequest(like=11, probes=3, min_recall=0.99, k=5))
+    assert plain is not exact and plain is not floored
+    assert exact.tier == "exact" and plain.tier == "approx"
+    # repeats hit their own entries
+    assert retriever.search(SearchRequest(like=11, exact=True, k=5)) is exact
+
+
+# ------------------------------------------------------- tombstoned like=
+def test_tombstoned_like_raises(fresh_retriever):
+    """Regression: more-like-this on a removed doc silently served results
+    seeded from the tombstone; now every path raises a clear error."""
+    retriever, docs, spec = fresh_retriever
+    retriever.remove([42])
+    # single request (batched MLT fast path)
+    with pytest.raises(ValueError, match="removed"):
+        retriever.search(SearchRequest(like=42, probes=6, k=5))
+    # mixed batch (resolve_query path: a vector query disables the
+    # all-MLT gather, so the per-request resolution must check too)
+    with pytest.raises(ValueError, match="removed"):
+        retriever.search([
+            SearchRequest(like=42, probes=6, k=5),
+            SearchRequest(query=docs[9], probes=6, k=5, exclude=9),
+        ])
+    # untouched docs still serve, and never return the tombstone
+    resp = retriever.search(SearchRequest(like=41, probes=12, k=10))
+    assert 42 not in resp.ids
+
+
+def test_cached_like_answer_does_not_outlive_removal(fresh_retriever):
+    """Response-cache interaction: a cached like= answer must not be
+    served after the seed doc is removed — through the facade or via a
+    direct index mutation."""
+    retriever, docs, spec = fresh_retriever
+    req = SearchRequest(like=12, probes=6, k=5)
+    first = retriever.search(req)
+    assert retriever.search(req) is first          # cached
+    retriever.remove([12])
+    with pytest.raises(ValueError, match="removed"):
+        retriever.search(req)
+    # direct index mutation (version bump is the coherency token)
+    req2 = SearchRequest(like=13, probes=6, k=5)
+    second = retriever.search(req2)
+    assert retriever.search(req2) is second
+    retriever.index.remove_documents([13])
+    with pytest.raises(ValueError, match="removed"):
+        retriever.search(req2)
+
+
+# ------------------------------------------------------ property (hypothesis)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # container has no dev deps
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _request_batches(draw):
+        """A batch of 2-5 legal SearchRequests spanning the tier lattice."""
+        n = draw(st.integers(min_value=2, max_value=5))
+        reqs = []
+        for i in range(n):
+            exact = draw(st.booleans())
+            kwargs = {"like": i, "k": 5}
+            kwargs["backend"] = draw(st.sampled_from(
+                (None, "auto", "reference", "fused")))
+            if exact:
+                kwargs["exact"] = True
+            else:
+                kwargs["probes"] = draw(st.sampled_from((None, 4, 6, 100_000)))
+                if draw(st.booleans()):
+                    kwargs["min_recall"] = draw(st.sampled_from((0.5, 0.9)))
+                kwargs["rescore"] = draw(st.sampled_from((None, 10)))
+            reqs.append(SearchRequest(**kwargs))
+        return reqs
+
+    @settings(max_examples=15, deadline=None)
+    @given(_request_batches())
+    def test_shape_grouping_property(retriever, reqs):
+        """`Retriever.exec_shape` is the batching contract: for any legal
+        request mix, each response's batch_size equals the number of
+        requests in the batch that resolve to the same shape — the
+        serving tier's queue keys and `_search_batch`'s groups agree."""
+        retriever._flush_request_caches()
+        shapes = [retriever.exec_shape(r) for r in reqs]
+        responses = retriever.search(reqs)
+        for shape, resp in zip(shapes, responses):
+            assert resp.batch_size == shapes.count(shape)
+            assert resp.backend == shape.backend != "auto"
+            if shape.tier == "exact":
+                assert resp.tier == "exact"
+                assert resp.predicted_recall == 1.0

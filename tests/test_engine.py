@@ -482,3 +482,170 @@ def test_lazy_bucket_major(engine_corpus):
     out = get_engine(idx, "fused").search(qw, probes=4, k=5)
     assert idx.bucket_data is not None            # cached after first use
     _assert_parity(ref, out, "fused-lazy")
+
+
+# ----------------------------------------------------------- tiered exact
+def _gt(index, qw, k, exclude):
+    from repro.core import brute_force_topk
+
+    return brute_force_topk(index.docs, jnp.atleast_2d(qw), k,
+                            exclude=jnp.atleast_1d(exclude))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_exact_tier_matches_brute_force(built_index, engine_corpus, backend):
+    """search_exact sweeps all T*K buckets: ids identical to brute force,
+    scores to float tolerance, on every backend."""
+    docs, _ = engine_corpus
+    qw = docs[20:36]
+    ex = jnp.arange(20, 36, dtype=jnp.int32)
+    s, i, n = get_engine(built_index, backend).search_exact(
+        qw, k=10, exclude=ex
+    )
+    gt_s, gt_i = _gt(built_index, qw, 10, ex)
+    assert np.array_equal(np.asarray(i), np.asarray(gt_i)), backend
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(gt_s), atol=1e-5, err_msg=backend
+    )
+    # honest accounting: every member of every bucket of every clustering
+    # was scored, plus the T*K leader comparisons
+    t, kc = built_index.counts.shape
+    expected = int(jnp.sum(built_index.counts)) + int(t * kc)
+    assert np.all(np.asarray(n) == expected), backend
+
+
+def test_exact_tier_single_query_shape(built_index, engine_corpus):
+    docs, _ = engine_corpus
+    s, i, n = get_engine(built_index, "reference").search_exact(docs[3], k=5)
+    assert s.shape == (5,) and i.shape == (5,) and n.shape == ()
+
+
+@pytest.mark.parametrize("pack", ["bf16", "int8"])
+def test_exact_tier_quantised_packs(built_index, bf16_index, int8_index,
+                                    engine_corpus, pack):
+    """The exact tier on a quantised fused pack routes through the forced
+    fp32 rescore: returned ids AND scores match fp32 brute force exactly —
+    the quantised sweep only proposes, the fp32 tail ranks."""
+    idx = bf16_index if pack == "bf16" else int8_index
+    docs, _ = engine_corpus
+    qw = docs[200:200 + QT + 3]
+    ex = jnp.arange(200, 200 + QT + 3, dtype=jnp.int32)
+    s, i, _ = get_engine(idx, "fused", query_tile=QT).search_exact(
+        qw, k=10, exclude=ex
+    )
+    gt_s, gt_i = _gt(built_index, qw, 10, ex)
+    assert np.array_equal(np.asarray(i), np.asarray(gt_i)), pack
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(gt_s), atol=1e-5, err_msg=pack
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_oversized_probes_clamp(built_index, engine_corpus, backend):
+    """Regression: an explicit probes= budget past T*K used to push
+    jax.lax.top_k(lsims, p) past K and die with an opaque XLA error; it
+    now clamps to the documented probe-everything = exact semantics."""
+    docs, _ = engine_corpus
+    qw = docs[50:58]
+    eng = get_engine(built_index, backend)
+    t, kc = built_index.counts.shape
+    total = int(t * kc)
+    s_all, i_all, n_all = eng.search(qw, probes=total, k=10)
+    s, i, n = eng.search(qw, probes=10_000, k=10)
+    assert np.array_equal(np.asarray(i), np.asarray(i_all)), backend
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(s_all), atol=1e-6, err_msg=backend
+    )
+    assert np.array_equal(np.asarray(n), np.asarray(n_all)), backend
+
+
+# ------------------------------------------------------ escalation driver
+@pytest.fixture()
+def laddered_index(built_index):
+    """A copy of the built index carrying a hand-made two-rung ladder (the
+    driver consumes rungs + fitted recall; a synthetic fit keeps the test
+    deterministic and cheap)."""
+    import dataclasses
+
+    from repro.core.calibrate import ProbeLadder
+
+    idx = dataclasses.replace(built_index)
+    t, kc = (int(x) for x in built_index.counts.shape)
+    idx.ladder = ProbeLadder(
+        probes=(6, 24), recall=(0.6, 0.9),
+        n_clusterings=t, k_clusters=kc,
+    )
+    return idx
+
+
+def test_escalation_meets_floor_at_next_rung(laddered_index, engine_corpus):
+    docs, _ = engine_corpus
+    eng = get_engine(laddered_index, "reference")
+    qw = docs[20:28]
+    s, i, n, info = eng.search_escalating(qw, probes=6, k=10, min_recall=0.8)
+    assert info["tier"] == "escalated"
+    assert info["escalations"] == 1
+    assert info["probes"] == 24
+    assert info["predicted_recall"] == pytest.approx(0.9)
+    # honest cumulative accounting: both passes' candidates are charged
+    _, _, n6 = eng.search(qw, probes=6, k=10)
+    _, _, n24 = eng.search(qw, probes=24, k=10)
+    assert np.array_equal(np.asarray(n), np.asarray(n6) + np.asarray(n24))
+    # the answer is the final rung's answer
+    _, i24, _ = eng.search(qw, probes=24, k=10)
+    assert np.array_equal(np.asarray(i), np.asarray(i24))
+
+
+def test_escalation_noop_when_prediction_meets_floor(laddered_index,
+                                                     engine_corpus):
+    docs, _ = engine_corpus
+    eng = get_engine(laddered_index, "reference")
+    qw = docs[20:28]
+    s, i, n, info = eng.search_escalating(qw, probes=6, k=10, min_recall=0.5)
+    assert info == {"tier": "approx", "escalations": 0, "probes": 6,
+                    "predicted_recall": pytest.approx(0.6)}
+    s0, i0, n0 = eng.search(qw, probes=6, k=10)
+    assert np.array_equal(np.asarray(i), np.asarray(i0))
+    assert np.array_equal(np.asarray(n), np.asarray(n0))
+
+
+def test_escalation_unreachable_floor_hits_exact(laddered_index,
+                                                 engine_corpus):
+    """A floor above the ladder's fitted maximum escalates to the exact
+    tier: brute-force-identical ids, predicted recall exactly 1.0."""
+    docs, _ = engine_corpus
+    eng = get_engine(laddered_index, "reference")
+    qw = docs[40:44]
+    ex = jnp.arange(40, 44, dtype=jnp.int32)
+    s, i, n, info = eng.search_escalating(
+        qw, probes=6, k=10, min_recall=0.99, exclude=ex
+    )
+    assert info["tier"] == "exact"
+    assert info["predicted_recall"] == 1.0
+    t, kc = laddered_index.counts.shape
+    assert info["probes"] == int(t) * int(kc)
+    _, gt_i = _gt(laddered_index, qw, 10, ex)
+    assert np.array_equal(np.asarray(i), np.asarray(gt_i))
+
+
+def test_escalation_without_ladder_goes_exact(built_index, engine_corpus):
+    """No ladder => no prediction can state the floor; the only honest
+    answer is the exact tier, after the requested approximate pass."""
+    docs, _ = engine_corpus
+    assert built_index.ladder is None
+    eng = get_engine(built_index, "reference")
+    s, i, n, info = eng.search_escalating(
+        docs[20:24], probes=6, k=10, min_recall=0.9
+    )
+    assert info["tier"] == "exact" and info["escalations"] == 1
+    _, gt_i = _gt(built_index, docs[20:24], 10,
+                  jnp.full((4,), -1, jnp.int32))
+    assert np.array_equal(np.asarray(i), np.asarray(gt_i))
+
+
+def test_escalation_validates_floor(built_index, engine_corpus):
+    docs, _ = engine_corpus
+    with pytest.raises(ValueError, match="min_recall"):
+        get_engine(built_index, "reference").search_escalating(
+            docs[:2], probes=6, k=10, min_recall=1.5
+        )

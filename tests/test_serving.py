@@ -386,3 +386,39 @@ def test_stop_without_drain_fails_queued(retriever):
             await server.submit(req)
 
     asyncio.run(go())
+
+
+def test_tiered_shapes_through_server(retriever):
+    """Tiered requests ride the micro-batcher unchanged: exact submits key
+    their own queue (pinned full-sweep shape), batch together, and answer
+    id/score-identical to synchronous exact search; budgeted peers in the
+    same burst are unaffected."""
+    exact_reqs = mlt_requests(5, seed=8, k=5, exact=True)
+    approx_reqs = mlt_requests(4, seed=9, probes=6, k=5)
+
+    async def go():
+        async with SearchServer(
+            retriever, window_s=0.02, max_batch=8
+        ) as server:
+            resps = await asyncio.gather(
+                *(server.submit(r) for r in exact_reqs + approx_reqs)
+            )
+            return resps, server.stats.snapshot()
+
+    responses, snap = asyncio.run(go())
+    assert snap["completed"] == 9
+    exact_resps, approx_resps = responses[:5], responses[5:]
+
+    t, kc = retriever._tk
+    solo = Retriever(retriever.index, backend="reference")  # no caches
+    for resp, req in zip(exact_resps, exact_reqs):
+        assert resp.tier == "exact" and resp.batch_size == 5
+        assert resp.probes == t * kc and resp.predicted_recall == 1.0
+        ref = solo.search(req)
+        assert np.array_equal(resp.doc_ids, ref.doc_ids)
+        np.testing.assert_allclose(resp.scores, ref.scores, atol=1e-6)
+    for resp in approx_resps:
+        assert resp.tier == "approx" and resp.batch_size == 4
+        assert resp.probes == 6
+    # the two tiers never shared a queue
+    assert snap["batch_size_hist"] == {4: 1, 5: 1}
