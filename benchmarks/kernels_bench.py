@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import (
     bucket_score, bucket_score_ref, bucket_score_tiled, build_probe_schedule,
     embed_bag, embed_bag_ref, fpf_iter, fpf_iter_ref, pick_query_tile,
-    quantize_bucket_major, topk_score, topk_score_ref,
+    quantize_bucket_major, schedule_block_reads, topk_score, topk_score_ref,
 )
 
 from .common import timed
@@ -63,7 +63,7 @@ def run():
         qs, bd, bi, jnp.asarray(sched), jnp.asarray(member), k=10
     )
     ok = np.allclose(np.asarray(s2), np.asarray(rs_), atol=1e-4)
-    n_live = int((member.any(axis=-1)).sum())
+    n_live = schedule_block_reads(member)
     vmem = (qt * D + B * D + qt * B + 2 * qt * 16) * 4 / 2**20
     print(f"bucket_score_tiled,({K}x{B}x{D} P={P} QT={qt}),{ok},{vmem:.1f},"
           f"{t_ref*1e3:.1f}")
@@ -158,7 +158,7 @@ def run_engines():
     for name in available_backends():
         try:
             eng = get_engine(idx, name)
-        except Exception as e:  # e.g. sharded divisibility on this host
+        except Exception as e:  # backend unavailable on this host
             print(f"# {name} skipped: {e}")
             continue
         t, (s, i, ns) = timed(

@@ -240,12 +240,19 @@ async def _run_async(retriever, requests, *, concurrency, rate_qps,
 
 
 def run(scale: str = "quick", seed: int = 0, *, backend: str = "auto",
-        concurrency: int = 64, rate_qps: float | None = None,
-        window_s: float = 0.002, replicas: int = 1,
-        max_queue_depth: int = 256, deadline_s: float | None = None,
-        n_docs: int | None = None, n_requests: int | None = None,
+        pack_dtype: str | None = None, concurrency: int = 64,
+        rate_qps: float | None = None, window_s: float = 0.002,
+        replicas: int = 1, max_queue_depth: int = 256,
+        deadline_s: float | None = None, n_docs: int | None = None,
+        n_requests: int | None = None,
         modes=("closed", "open")) -> list[dict]:
-    """Build, load-test, return labelled entries for BENCH_query.json."""
+    """Build, load-test, return labelled entries for BENCH_query.json.
+
+    ``pack_dtype`` sets the bucket-major storage precision the fused and
+    sharded backends serve from (bf16/int8 shrink the packed bytes); every
+    entry is labelled with it (plus ``n_shards`` for the sharded backend)
+    so quantised serving rows never masquerade as fp32 ones.
+    """
     sz = LOADTEST_SIZES[scale]
     n_docs = n_docs or sz["n_docs"]
     n_requests = n_requests or sz["n_requests"]
@@ -256,13 +263,15 @@ def run(scale: str = "quick", seed: int = 0, *, backend: str = "auto",
     retriever, docs, spec = build_retriever(
         n_docs, backend=backend, seed=seed,
         pack_major=True if picked == "fused" else None,
+        pack_dtype=pack_dtype,
     )
     requests = make_mix(n_docs, spec, n_requests, seed=seed)
     served = retriever.backend
     platform = jax.default_backend()
     print(f"\n# Loadtest — async serving tier vs sequential baseline "
           f"(n={n_docs}, {n_requests} requests, backend={served}, "
-          f"platform={platform}; fused is interpret-mode off-TPU)")
+          f"pack_dtype={pack_dtype or 'float32'}, "
+          f"platform={platform}; fused/sharded interpret off-TPU)")
 
     # Sequential baseline on a FRESH facade: the served retriever's
     # request/response caches must not answer for the engine.
@@ -299,16 +308,25 @@ def run(scale: str = "quick", seed: int = 0, *, backend: str = "auto",
                   f"{e['qps']:.1f} achieved, p50/p99 {e['p50_ms']:.1f}/"
                   f"{e['p99_ms']:.1f} ms, expired={e['expired']} "
                   f"rejected={e['rejected']}")
+    labels = {"backend": served, "platform": platform,
+              "pack_dtype": pack_dtype or "float32"}
+    if served == "sharded":
+        labels["n_shards"] = jax.device_count()
+    entries.insert(0, seq)
     for e in entries:
-        e.setdefault("backend", served)
-        e.setdefault("platform", platform)
-    entries.insert(0, {**seq, "backend": served, "platform": platform})
+        for key, val in labels.items():
+            e.setdefault(key, val)
     return entries
 
 
 def main():
     ap = std_parser(__doc__)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--pack-dtype", default=None,
+                    choices=[None, "float32", "bfloat16", "int8"],
+                    help="bucket-major storage precision the fused/sharded "
+                         "backend serves from (bf16 halves, int8 quarters "
+                         "the packed bytes)")
     ap.add_argument("--docs", type=int, default=None,
                     help="override the scale's corpus size")
     ap.add_argument("--requests", type=int, default=None,
@@ -330,6 +348,10 @@ def main():
     args = ap.parse_args()
     modes = ("closed", "open") if args.mode == "both" else (args.mode,)
     run(args.scale, args.seed, backend=args.backend,
+        pack_dtype=(
+            None if args.pack_dtype in (None, "float32")
+            else args.pack_dtype
+        ),
         concurrency=args.concurrency, rate_qps=args.rate,
         window_s=args.window_ms / 1e3, replicas=args.replicas,
         deadline_s=(

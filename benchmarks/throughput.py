@@ -64,12 +64,52 @@ def _query_tile_of(index, k: int) -> int | None:
     )
 
 
+def _sharded_pack_stats(engine, qw, probes: int, k: int):
+    """Per-query packed HBM bytes the sharded-fused path reads, plus the
+    serving tile. The byte count fixes the SCHEDULE to the fp32-sized tile
+    so rows differ only in storage itemsize — the controlled comparison
+    that makes an int8 pack read exactly ¼ the bytes of fp32 (the engine's
+    own tile can only be larger for a reduced-precision pack, i.e. fewer
+    duplicate block reads, so real traffic is at or below the reported
+    number). Every shard reads ITS (B_l, D) slice of each scheduled
+    bucket, hence the ``n_shards`` factor."""
+    from repro.kernels.bucket_score.ops import (
+        build_probe_schedule_device, schedule_block_reads, schedule_length,
+    )
+
+    data, _, _, _ = engine._ensure_placed()
+    n_shards, n_buckets, b_l, d = (int(x) for x in data.shape)
+    nq = int(qw.shape[0])
+    flat = engine._flat_probes(qw, engine._probes_t(probes))
+    qt_serve = engine.query_tile
+    if qt_serve is None:
+        qt_serve = min(
+            pick_query_tile(d, b_l, k_pad=_pad_to(k, 8),
+                            pack_itemsize=data.dtype.itemsize),
+            _pad_to(nq, 8),
+        )
+    qt_sched = min(
+        pick_query_tile(d, b_l, k_pad=_pad_to(k, 8), pack_itemsize=4),
+        _pad_to(nq, 8),
+    )
+    s_len = schedule_length(qt_sched, int(flat.shape[1]), n_buckets)
+    _, member = build_probe_schedule_device(
+        flat, query_tile=qt_sched, s_len=s_len
+    )
+    reads = schedule_block_reads(member)
+    per_q = n_shards * reads * b_l * d * data.dtype.itemsize / nq
+    return round(per_q, 1), qt_serve
+
+
 def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
         backends=None, pack_dtypes=(None, "bfloat16", "int8"),
         rescore=None):
-    """Returns a list of labelled throughput entries. The fused backend is
-    measured once per pack dtype (re-packing the SAME index, so clustering
-    is held fixed); reference/sharded score fp32 docs and get one row."""
+    """Returns a list of labelled throughput entries. The fused AND sharded
+    backends are measured once per pack dtype (re-packing the SAME index,
+    so clustering is held fixed); sharded rows additionally carry
+    ``n_shards`` and ``packed_bytes_per_query`` (the shard-local block
+    bytes the probe-dedup schedule reads — bf16 exactly ½, int8 exactly ¼
+    of the fp32 row, asserted). Reference scores fp32 docs, one row."""
     sz = bench_sizes(scale)
     docs_np, spec, _ = make_corpus(CorpusConfig(
         n_docs=sz["n_docs"], field_dims=sz["field_dims"],
@@ -82,7 +122,15 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
         docs, spec, sz["k_clusters"], n_clusterings=3, method="fpf",
         key=jax.random.PRNGKey(seed), pack_major=True,
     )
+    # One query draw PER BATCH SIZE, shared by every backend × pack-dtype
+    # row — rows at the same batch are measured on identical queries (and
+    # probe sets), which is what lets the packed-bytes ratio check below
+    # hold the schedule fixed across pack dtypes.
     rng = np.random.default_rng(seed)
+    qids_by_bs = {
+        bs: rng.choice(sz["n_docs"], bs, replace=False)
+        for bs in batch_sizes
+    }
     if backends is None:
         backends = available_backends()
 
@@ -94,7 +142,10 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
           "p50_ms_per_query,p99_ms_per_query")
     entries = []
     for name in backends:
-        dtypes = pack_dtypes if name == "fused" else (None,)
+        # BOTH tiled backends sweep the pack dtypes — the sharded path
+        # scores from shard-local bf16/int8 packs exactly like fused does
+        # from the global one; reference scores fp32 docs and gets one row.
+        dtypes = pack_dtypes if name in ("fused", "sharded") else (None,)
         for pd in dtypes:
             if pd is None:
                 idx = index
@@ -103,16 +154,19 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
                     index, bucket_data=None, bucket_scales=None,
                     pack_dtype=pd,
                 )
-                idx.ensure_bucket_major()
-            try:
-                engine = get_engine(idx, name)
-            except Exception as e:      # e.g. sharded divisibility
-                print(f"# {name} skipped: {e}")
-                continue
+                if name == "fused":
+                    idx.ensure_bucket_major()
+            engine = get_engine(idx, name)
             qt = _query_tile_of(idx, K_NN) if name == "fused" else None
             label = pd or "float32"
+            # Off-TPU the tiled kernel interprets (a correctness smoke, not
+            # a speed claim) — two repeats bound the wall cost of the
+            # sharded sweep without changing what the entries verify.
+            reps = (
+                2 if name == "sharded" and platform != "tpu" else REPEATS
+            )
             for bs in batch_sizes:
-                qids = rng.choice(sz["n_docs"], bs, replace=False)
+                qids = qids_by_bs[bs]
                 qw = docs[jnp.asarray(qids)]
                 ex = jnp.asarray(qids, jnp.int32)
                 ts, _ = timed_all(
@@ -120,7 +174,7 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
                         q, probes=PROBES, k=K_NN, exclude=x,
                         rescore=rescore,
                     ),
-                    repeats=REPEATS,
+                    repeats=reps,
                 )
                 per_query_ms = np.asarray(ts, np.float64) / bs * 1e3
                 t = float(np.median(ts))
@@ -135,11 +189,45 @@ def run(scale: str = "quick", seed: int = 0, batch_sizes=BATCH_SIZES,
                     "pack_dtype": label, "query_tile": qt,
                     "rescore": rescore, "platform": platform,
                 }
+                if name == "sharded":
+                    per_q, qt_s = _sharded_pack_stats(
+                        engine, qw, PROBES, K_NN
+                    )
+                    entry["query_tile"] = qt_s
+                    entry["n_shards"] = engine.n_shards
+                    entry["packed_bytes_per_query"] = per_q
                 entries.append(entry)
-                print(f"{name},{label},{qt},{bs},{entry['qps']:.1f},"
+                print(f"{name},{label},{entry['query_tile']},{bs},"
+                      f"{entry['qps']:.1f},"
                       f"{entry['p50_ms_per_query']:.3f},"
                       f"{entry['p99_ms_per_query']:.3f}")
+    _check_sharded_pack_ratio(entries)
     return entries
+
+
+def _check_sharded_pack_ratio(entries):
+    """Regression gate: at the same batch, a sharded int8 pack must read
+    exactly ¼ (and bf16 exactly ½) the packed bytes of sharded fp32 — the
+    schedule is held fixed, so only the storage itemsize may differ."""
+    by = {
+        (e["batch"], e["pack_dtype"]): e["packed_bytes_per_query"]
+        for e in entries
+        if e["backend"] == "sharded" and "packed_bytes_per_query" in e
+    }
+    checked = 0
+    for (bs, pd), v in by.items():
+        base = by.get((bs, "float32"))
+        if base is None or pd == "float32":
+            continue
+        want = {"bfloat16": 2.0, "int8": 4.0}[pd]
+        assert abs(base / v - want) < 1e-6, (
+            f"sharded {pd} packed bytes/query {v} is not 1/{want:.0f} of "
+            f"fp32 ({base}) at batch {bs}"
+        )
+        checked += 1
+    if checked:
+        print(f"# sharded pack-dtype byte ratios verified "
+              f"({checked} entries: bf16=1/2, int8=1/4 of fp32)")
 
 
 if __name__ == "__main__":
@@ -154,10 +242,26 @@ if __name__ == "__main__":
         "--rescore", type=int, default=None,
         help="exact-rescore tail depth (>= k) applied to every search — "
              "prices the fp32 gather+matmul re-rank into the QPS numbers")
+    parser.add_argument(
+        "--backend", default=None,
+        choices=[None, "reference", "fused", "sharded"],
+        help="measure ONE backend (default sweeps all registered ones); "
+             "combine with XLA_FLAGS=--xla_force_host_platform_device_count"
+             "=N to exercise the sharded-fused path on a forced CPU mesh")
+    parser.add_argument(
+        "--batches", default=None,
+        help="comma-separated batch sizes (default 1,8,64) — smokes trim "
+             "this to keep interpret-mode sweeps bounded")
     args = parser.parse_args()
     dts = (
         (None, "bfloat16", "int8") if args.pack_dtype is None
         else (None,) if args.pack_dtype == "float32"
         else (args.pack_dtype,)
     )
-    run(args.scale, args.seed, pack_dtypes=dts, rescore=args.rescore)
+    run(args.scale, args.seed,
+        batch_sizes=(
+            BATCH_SIZES if args.batches is None
+            else tuple(int(b) for b in args.batches.split(","))
+        ),
+        backends=None if args.backend is None else (args.backend,),
+        pack_dtypes=dts, rescore=args.rescore)

@@ -267,12 +267,17 @@ class SearchRequest:
     ``probes`` fixes the visited-cluster budget directly; ``recall_target``
     lets :func:`plan_probes` choose it; setting both is an error, setting
     neither uses the retriever's default. ``backend`` overrides the
-    retriever's engine choice for this request only. ``rescore`` (>= k)
+    retriever's engine choice for this request only (``"auto"`` picks
+    ``fused`` on TPU, ``sharded`` on any multi-device host — the latter
+    scores shard-local quantised packs and merges one top-k collective).
+    ``rescore`` (>= k)
     opts into the exact-rescore tail: the pruned search runs at that depth
     and the surviving candidates are re-scored against the fp32 corpus
     before the final top-k cut — bounding quantised-storage noise
     (``pack_dtype="bfloat16"``/``"int8"``) at the cost of one extra
-    gather+matmul, honestly charged to ``n_scored``.
+    gather+matmul, honestly charged to ``n_scored`` (on the sharded
+    backend the rescore itself is distributed over the row-sharded
+    corpus).
 
     Two tiered modes turn predictions into guarantees. ``exact=True``
     sweeps ALL T·K buckets (the clustered exact pass) — the answer is the

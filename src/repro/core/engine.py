@@ -21,8 +21,15 @@ distributed path with its own API. This module unifies them behind a single
     storage with fp32 accumulation; int8 packs dequantise per bucket via the
     index's ``bucket_scales``).
 ``sharded``
-    The ``shard_map`` doc-sharded path of :mod:`repro.core.distributed` —
-    local scoring, one collective-light top-k merge.
+    The ``shard_map`` doc-sharded path of :mod:`repro.core.distributed`,
+    running the SAME fused v2 kernel shard-locally: each device holds a
+    bucket-major ``(T*K, B_local, D)`` pack of its slice of every cluster
+    (``pack_dtype`` bf16/int8 supported, per-``(shard, bucket)`` scales),
+    navigation and the probe-dedup schedule are computed once (replicated —
+    probed buckets are identical across shards), and the only collective is
+    the 2k-word per-shard top-k merge. Any corpus size shards cleanly
+    (sentinel-row padding); the exact-rescore tail re-ranks against the
+    row-sharded fp32 corpus without gathering it.
 
 All backends share *identical* probe semantics (:func:`split_probes` divides
 the budget evenly over the T clusterings), navigation-vs-scoring query split,
@@ -137,15 +144,15 @@ def available_backends() -> tuple[str, ...]:
 def pick_backend(index=None) -> str:
     """Platform auto-pick: TPU -> fused, multi-device -> sharded, else ref.
 
-    Given an ``index``, infeasible picks degrade gracefully (sharded needs
-    ``n_docs`` divisible by the device count) instead of raising later.
+    Any corpus size shards cleanly (the sharded backend pads with sentinel
+    rows), so multi-device always picks ``sharded``; ``index`` is accepted
+    for backward compatibility but no longer gates the choice.
     """
+    del index
     if jax.default_backend() == "tpu":
         return "fused"
     if jax.device_count() > 1:
-        if index is None or index.n_docs % jax.device_count() == 0:
-            return "sharded"
-        return "reference"
+        return "sharded"
     return "reference"
 
 
@@ -441,8 +448,16 @@ class _EngineBase:
         s, ids, n_scored = self.search(
             qw2, probes=probes, k=rescore, exclude=exclude, nav_query=nav
         )
-        rs, ri, extra = _exact_rescore(self.index.docs, qw2, ids, k)
+        rs, ri, extra = self._rescore_candidates(qw2, ids, k)
         return self._finish(single, rs, ri, n_scored + extra)
+
+    def _rescore_candidates(self, qw, ids, k):
+        """Exact fp32 re-rank of candidate ids — the rescore tail's scoring
+        step, overridable per backend. The default gathers from the local
+        doc-major corpus; the sharded backend re-ranks against the
+        row-sharded corpus without gathering it
+        (:func:`repro.core.distributed.distributed_exact_rescore`)."""
+        return _exact_rescore(self.index.docs, qw, ids, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -657,17 +672,43 @@ class FusedEngine(_EngineBase):
 # -------------------------------------------------------------------- sharded
 @register_backend("sharded")
 class ShardedEngine(_EngineBase):
-    """``shard_map`` doc-sharded backend (see :mod:`repro.core.distributed`).
+    """Sharded-fused backend: the fused v2 hot path run shard-locally.
 
-    The corpus is row-sharded over the mesh; probing is replicated, scoring
-    is local, and the only collective is the 2k-word per-shard top-k merge.
-    Defaults to a 1-axis mesh over every visible device; requires
-    ``n_docs`` divisible by the shard count.
+    Each device of the mesh holds a bucket-major ``(T*K, B_local, D)`` pack
+    of ITS row-slice of every cluster (``ClusterPruneIndex.
+    ensure_local_bucket_major`` — ``pack_dtype`` bf16 halves, int8 quarters
+    the per-shard HBM bytes via per-``(shard, bucket)`` scales). A search
+    navigates ONCE on the replicated fp32 leaders, builds the probe-dedup
+    schedule ONCE on device (probed buckets are identical across shards, so
+    schedule and membership masks replicate), then every shard runs
+    :func:`~repro.kernels.bucket_score.ops.bucket_score_tiled` over its
+    local blocks — the same ``(QT, D)×(D, B_l)`` MXU tiles as the
+    single-device fused path, on a smaller ``B_l`` block (which buys a
+    LARGER query tile out of the same VMEM budget). The only collective is
+    the 2k-word per-shard top-k ``all_gather`` + merge; the same flat probe
+    tensor drives ``n_scored`` accounting, so navigation never runs twice.
+
+    Any corpus size shards cleanly: rows pad to ``ceil(n / shards)`` per
+    shard with sentinel rows no bucket references (never scored, never in
+    ``n_scored``). Mutations invalidate lazily — the pack re-materialises
+    on the first search after an ``index.version`` bump. The exact-rescore
+    tail (and with it the quantised exact tier) re-ranks candidates
+    against the row-sharded fp32 corpus via a ``pmax`` all-reduce
+    (:func:`~repro.core.distributed.distributed_exact_rescore`) — the
+    corpus is never gathered onto one device.
     """
 
-    def __init__(self, index, *, mesh=None, shard_axes=None):
-        from .distributed import build_local_buckets, shard_docs
+    uses_packed_storage = True
 
+    def __init__(
+        self,
+        index,
+        *,
+        mesh=None,
+        shard_axes=None,
+        interpret: bool | None = None,
+        query_tile: int | None = None,
+    ):
         super().__init__(index)
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
@@ -679,18 +720,50 @@ class ShardedEngine(_EngineBase):
         n_shards = 1
         for a in self.shard_axes:
             n_shards *= mesh.shape[a]
-        if index.n_docs % n_shards:
-            raise ValueError(
-                f"sharded backend needs n_docs ({index.n_docs}) divisible by "
-                f"the shard count ({n_shards})"
-            )
         self.n_shards = n_shards
-        t, k_clusters = index.counts.shape
-        self._docs_sh = shard_docs(index.docs, mesh, self.shard_axes)
-        self._buckets_local = jnp.asarray(
-            build_local_buckets(
-                index.assignments(), index.n_docs, n_shards, k_clusters
-            )
+        self.interpret = interpret
+        self.query_tile = query_tile
+        self._pack_version = None   # index.version the placed pack reflects
+
+    def _ensure_placed(self):
+        """Device-resident shard-local state, repacked lazily on mutation.
+
+        Returns ``(data, ids, scales, n_local)`` placed shard-major on the
+        mesh plus the row-sharded fp32 corpus for the rescore tail. Keyed
+        on ``index.version``: the first search after an add/remove pays the
+        repack + placement once, steady-state searches touch nothing.
+        """
+        if self._pack_version == self.index.version:
+            return self._placed
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from .distributed import shard_docs
+
+        data, ids, scales, n_local = self.index.ensure_local_bucket_major(
+            self.n_shards
+        )
+        mesh, axes = self.mesh, self.shard_axes
+        sh = lambda *spec: NamedSharding(mesh, P(*spec))
+        data = jax.device_put(data, sh(axes, None, None, None))
+        ids = jax.device_put(ids, sh(axes, None, None))
+        if scales is not None:
+            scales = jax.device_put(scales, sh(axes, None))
+        self._docs_sh = shard_docs(self.index.docs, mesh, axes)
+        self._n_local = n_local
+        self._placed = (data, ids, scales, n_local)
+        self._pack_version = self.index.version
+        return self._placed
+
+    def _rescore_candidates(self, qw, ids, k):
+        # fp32 re-rank against the row-sharded corpus: each shard scores
+        # the candidates it owns, one pmax all-reduce merges — nq·R words
+        # of communication, corpus never gathered.
+        from .distributed import distributed_exact_rescore
+
+        self._ensure_placed()
+        return distributed_exact_rescore(
+            self.mesh, self._docs_sh, qw, ids,
+            k=k, n_local=self._n_local, shard_axes=self.shard_axes,
         )
 
     def search(self, qw, *, probes, k, exclude=None, nav_query=None,
@@ -700,19 +773,39 @@ class ShardedEngine(_EngineBase):
                 qw, probes=probes, k=k, rescore=rescore, exclude=exclude,
                 nav_query=nav_query,
             )
-        from .distributed import distributed_index_search
+        from ..kernels.bucket_score.ops import (
+            build_probe_schedule_device, pick_query_tile, schedule_length,
+        )
+        from ..kernels.common import pad_to
+        from .distributed import distributed_bucket_score
 
         qw, nav, exclude, single = self._canonical(qw, nav_query, exclude)
-        probes_t = self._probes_t(probes)
-        s, i = distributed_index_search(
-            self.mesh, self._docs_sh, self.index.leaders,
-            self._buckets_local, qw,
-            probes_t=probes_t, k=k, shard_axes=self.shard_axes,
-            exclude=exclude, nav=nav,
+        data, ids, scales, n_local = self._ensure_placed()
+        # Navigate ONCE: the flat probe tensor feeds the (replicated)
+        # schedule AND the n_scored accounting below.
+        flat = self._flat_probes(nav, self._probes_t(probes))
+        _, n_buckets, b_l, d = (int(x) for x in data.shape)
+        qt = self.query_tile
+        if qt is None:
+            qt = min(
+                pick_query_tile(
+                    d, b_l, k_pad=pad_to(k, 8),
+                    pack_itemsize=data.dtype.itemsize,
+                ),
+                pad_to(qw.shape[0], 8),
+            )
+        s_len = schedule_length(qt, int(flat.shape[1]), n_buckets)
+        sched, member = build_probe_schedule_device(
+            flat, query_tile=qt, s_len=s_len
         )
+        s, i = distributed_bucket_score(
+            self.mesh, data, ids, scales, qw, sched, member,
+            k=k, n_local=n_local, shard_axes=self.shard_axes,
+            exclude=exclude, interpret=self.interpret,
+        )
+        if s.shape[-1] < k:   # shards × schedule can't surface k candidates
+            pad = k - s.shape[-1]
+            s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+            i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
         i = jnp.where(jnp.isfinite(s), i, -1)
-        # Navigation runs twice (replicated in the kernel + here for cost
-        # accounting); leaders are T*K ~ sqrt(n) rows, so this is noise next
-        # to bucket scoring and keeps the shard_map signature probe-free.
-        flat = self._flat_probes(nav, probes_t)
         return self._finish(single, s, i, self._n_scored(flat))

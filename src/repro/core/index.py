@@ -336,6 +336,7 @@ class ClusterPruneIndex:
         self.bucket_data = None
         self.bucket_scales = None
         self.__dict__.pop("_bucket_major_flat", None)
+        self.__dict__.pop("_local_bucket_major", None)
         self.__dict__.pop("_engines", None)
         self.version += 1
 
@@ -504,6 +505,36 @@ class ClusterPruneIndex:
             ),
         )
         return self._bucket_major_flat
+
+    def ensure_local_bucket_major(
+        self, n_shards: int
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray | None, int]:
+        """Shard-local bucket-major pack for the sharded-fused backend:
+        ``((S, T*K, B_l, D) data, (S, T*K, B_l) LOCAL ids with -1 padding,
+        (S, T*K) fp32 scales | None, n_local rows per shard)``.
+
+        Each shard's slice of every bucket, in ``pack_dtype`` storage
+        precision (int8 quantises per ``(shard, bucket)`` — each shard's
+        absmax over its own slice). Cached per shard count and dropped by
+        :meth:`_invalidate`, so mutations trigger a lazy repack on the next
+        sharded-fused search — same coherence contract as
+        :meth:`ensure_bucket_major`. Corpora whose size does not divide
+        ``n_shards`` pad with sentinel rows no bucket references.
+        """
+        from .distributed import pack_local_bucket_major
+
+        n_shards = int(n_shards)
+        cache = self.__dict__.setdefault("_local_bucket_major", {})
+        hit = cache.get(n_shards)
+        if hit is not None:
+            return hit
+        self.pack_dtype = validate_pack_dtype(self.pack_dtype)
+        k_clusters = int(self.buckets.shape[1])
+        cache[n_shards] = pack_local_bucket_major(
+            self.docs, self.assignments(), k_clusters, n_shards,
+            dtype=self.pack_dtype,
+        )
+        return cache[n_shards]
 
     # ------------------------------------------------------------ persistence
     def save(self, path) -> None:

@@ -14,7 +14,7 @@ from .bucket_score import bucket_score, bucket_score_ref, bucket_score_tiled
 from .bucket_score.ops import (
     build_probe_schedule, build_probe_schedule_device,
     dequantize_bucket_major, pack_bucket_major, pick_query_tile,
-    quantize_bucket_major, schedule_length,
+    quantize_bucket_major, schedule_block_reads, schedule_length,
 )
 from .fpf_iter import fpf_iter, fpf_iter_ref
 from .fpf_iter.ops import fpf_centers_fused
@@ -24,6 +24,7 @@ __all__ = [
     "topk_score", "topk_score_ref",
     "bucket_score", "bucket_score_tiled", "bucket_score_ref",
     "build_probe_schedule", "build_probe_schedule_device", "schedule_length",
+    "schedule_block_reads",
     "pick_query_tile", "pack_bucket_major",
     "quantize_bucket_major", "dequantize_bucket_major",
     "fpf_iter", "fpf_iter_ref", "fpf_centers_fused",

@@ -51,6 +51,7 @@ __all__ = [
     "build_probe_schedule_device",
     "schedule_length",
     "pick_query_tile",
+    "schedule_block_reads",
     "pack_bucket_major",
     "quantize_bucket_major",
     "dequantize_bucket_major",
@@ -356,6 +357,21 @@ def build_probe_schedule_device(
         return sched, member
 
     return jax.vmap(one_tile)(flat, qidx)
+
+
+def schedule_block_reads(member: jnp.ndarray) -> int:
+    """Live HBM block reads a probe-dedup schedule performs.
+
+    ``member`` is the ``(n_tiles, S_len, QT)`` membership tensor of
+    :func:`build_probe_schedule_device`; a slot with no member query is
+    schedule padding whose repeat DMA the pipeline skips, so the number of
+    slots with ANY member is exactly the bucket blocks the kernel reads
+    from HBM. Benchmarks multiply by the per-shard block size
+    ``B · D · itemsize`` (and by the shard count for the sharded path —
+    every shard reads ITS slice of each scheduled bucket) to report
+    packed bytes per query.
+    """
+    return int(jnp.asarray(member).any(axis=-1).sum())
 
 
 def quantize_bucket_major(data: jnp.ndarray):

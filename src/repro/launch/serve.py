@@ -66,7 +66,7 @@ __all__ = ["build_index", "build_retriever", "make_requests",
 
 def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
                 n_clusterings: int = 3, seed: int = 0,
-                pack_major: bool | None = None):
+                pack_major: bool | None = None, pack_dtype=None):
     from repro.core import ClusterPruneIndex
 
     docs_np, spec, _ = make_corpus(CorpusConfig(n_docs=n_docs, seed=seed))
@@ -76,6 +76,7 @@ def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
     index = ClusterPruneIndex.build(
         docs, spec, k_clusters, n_clusterings=n_clusterings, method="fpf",
         key=jax.random.PRNGKey(seed), pack_major=pack_major,
+        pack_dtype=pack_dtype,
     )
     return index, docs, spec
 
@@ -83,16 +84,19 @@ def build_index(n_docs: int = 20_000, *, k_clusters: int | None = None,
 def build_retriever(n_docs: int = 20_000, *, backend: str = "auto",
                     k_clusters: int | None = None, n_clusterings: int = 3,
                     seed: int = 0, pack_major: bool | None = None,
-                    calibrate: bool = False, calibrate_opts=None):
+                    pack_dtype=None, calibrate: bool = False,
+                    calibrate_opts=None):
     """Corpus + index + facade in one call -> (retriever, docs, spec).
 
     ``calibrate=True`` arms lazy planner calibration: the first
     ``recall_target=`` request fits the per-index probe ladder
-    (``calibrate_opts`` passes sampling options through).
+    (``calibrate_opts`` passes sampling options through). ``pack_dtype``
+    sets the bucket-major storage precision (fused AND sharded backends
+    score from it — bf16 halves, int8 quarters the packed bytes).
     """
     index, docs, spec = build_index(
         n_docs, k_clusters=k_clusters, n_clusterings=n_clusterings,
-        seed=seed, pack_major=pack_major,
+        seed=seed, pack_major=pack_major, pack_dtype=pack_dtype,
     )
     retriever = Retriever(index, backend=backend, calibrate=calibrate,
                           calibrate_opts=calibrate_opts)

@@ -52,8 +52,12 @@ __all__ = ["SearchServer", "ReplicaPool", "default_max_batch"]
 
 def _engine_query_tile(retriever: Retriever) -> int | None:
     """The fused kernel's query tile for this retriever, or None when the
-    serving backend does not tile (reference/sharded)."""
-    if retriever.backend != "fused":
+    serving backend does not tile (reference).
+
+    Both tiling backends are sized: ``fused`` from the global bucket block,
+    ``sharded`` from the shard-local block (``B_l ~ B / shards`` — smaller,
+    so the same VMEM budget buys a LARGER tile)."""
+    if retriever.backend not in ("fused", "sharded"):
         return None
     opt = retriever.engine_opts.get("query_tile")
     if opt:
@@ -63,6 +67,39 @@ def _engine_query_tile(retriever: Retriever) -> int | None:
 
     index = retriever.index
     data = index.bucket_data
+    if retriever.backend == "sharded":
+        import jax
+
+        mesh = retriever.engine_opts.get("mesh")
+        if mesh is not None:
+            axes = tuple(
+                retriever.engine_opts.get("shard_axes") or mesh.axis_names
+            )
+            n_shards = 1
+            for a in axes:
+                n_shards *= mesh.shape[a]
+        else:
+            n_shards = jax.device_count()
+        cached = (getattr(index, "_local_bucket_major", None) or {}).get(
+            n_shards
+        )
+        if cached is not None:  # placed pack: exact shard-local block shape
+            _, _, b, d = (int(x) for x in cached[0].shape)
+            return pick_query_tile(
+                d, b, k_pad=pad_to(10, 8),
+                pack_itemsize=cached[0].dtype.itemsize,
+            )
+        # not packed yet: estimate B_l from the global B (members spread
+        # ~evenly over shards; the flush trigger tolerates the estimate)
+        b_est = -(-int(index.buckets.shape[-1]) // n_shards)
+        b = max(8, -(-b_est // 8) * 8)
+        d = int(index.docs.shape[-1])
+        itemsize = {"bfloat16": 2, "int8": 1}.get(
+            getattr(index, "pack_dtype", None) or "float32", 4
+        )
+        return pick_query_tile(
+            d, b, k_pad=pad_to(10, 8), pack_itemsize=itemsize
+        )
     if data is not None:
         _, _, b, d = (int(x) for x in data.shape)
         itemsize = data.dtype.itemsize

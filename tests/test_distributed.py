@@ -88,3 +88,102 @@ def test_distributed_search_8dev():
         text=True, timeout=600,
     )
     assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr
+
+
+# Sharded-FUSED parity: the ShardedEngine runs the query-tiled Pallas v2
+# kernel (interpret mode on CPU) shard-locally over device-local
+# bucket-major packs. The odd corpus size (1019 on 8 shards) exercises the
+# sentinel-row padding; pack dtypes, ragged batches, exclude, rescore and
+# the exact tier all check against the single-device reference engine.
+_FUSED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (ClusterPruneIndex, FieldSpec, brute_force_topk,
+                        normalize_fields, weighted_query)
+from repro.core.engine import get_engine, pick_backend
+
+assert jax.device_count() == 8
+assert pick_backend() == "sharded"   # multi-device auto-pick, any n_docs
+
+spec = FieldSpec(names=("a", "b"), dims=(32, 32))
+n = 1019                             # deliberately NOT divisible by 8
+docs = normalize_fields(jax.random.normal(jax.random.PRNGKey(0), (n, 64)), spec)
+idx = ClusterPruneIndex.build(docs, spec, 16, n_clusterings=3, method="fpf")
+w = jnp.tile(jnp.asarray([[0.7, 0.3]]), (5, 1))
+qw = weighted_query(docs[10:15], w, spec)
+ref = get_engine(idx, "reference")
+sh = get_engine(idx, "sharded", interpret=True)
+
+def ids_scores_n(a, b, tag, atol=1e-5):
+    assert np.array_equal(np.asarray(a[1]), np.asarray(b[1])), tag + " ids"
+    assert np.allclose(np.asarray(a[0]), np.asarray(b[0]), atol=atol), \
+        tag + " scores"
+    assert np.array_equal(np.asarray(a[2]), np.asarray(b[2])), tag + " n"
+
+# fp32: exact id/score/n_scored parity, plain + exclude + rescore
+ids_scores_n(ref.search(qw, probes=6, k=10),
+             sh.search(qw, probes=6, k=10), "fp32")
+ex = jnp.asarray([10, 11, 12, 13, 14], jnp.int32)
+ids_scores_n(ref.search(qw, probes=6, k=10, exclude=ex),
+             sh.search(qw, probes=6, k=10, exclude=ex), "exclude")
+ids_scores_n(ref.search(qw, probes=6, k=5, rescore=20),
+             sh.search(qw, probes=6, k=5, rescore=20), "rescore")
+
+# ragged batch shapes, incl. a single 1-D query (squeezed result shape)
+for m in (1, 3, 7):
+    qb = weighted_query(docs[20:20 + m], jnp.tile(w[:1], (m, 1)), spec)
+    ids_scores_n(ref.search(qb, probes=6, k=10),
+                 sh.search(qb, probes=6, k=10), f"batch{m}")
+q1 = weighted_query(docs[42], jnp.asarray([0.5, 0.5]), spec)
+r1, s1 = ref.search(q1, probes=6, k=10), sh.search(q1, probes=6, k=10)
+assert s1[0].shape == (10,) and np.array_equal(np.asarray(r1[1]),
+                                               np.asarray(s1[1]))
+
+# exact tier (fp32 pack) == brute force on shards
+es, ei, en = sh.search_exact(qw, k=10)
+gs, gi = brute_force_topk(docs, qw, 10)
+assert np.array_equal(np.asarray(ei), np.asarray(gi)), "exact tier ids"
+rs, ri, rn = ref.search_exact(qw, k=10)
+assert np.array_equal(np.asarray(en), np.asarray(rn)), "exact tier n"
+
+# quantised packs: fp32 leaders keep navigation & n_scored bit-identical;
+# storage noise stays within the usual floors and the rescore tail (and
+# with it the exact tier) recovers exact fp32 ids/scores.
+r = ref.search(qw, probes=6, k=10)
+for dt, floor in (("bfloat16", 0.9), ("int8", 0.9)):
+    q = dataclasses.replace(idx, bucket_data=None, bucket_scales=None,
+                            pack_dtype=dt)
+    shq = get_engine(q, "sharded", interpret=True)
+    sq = shq.search(qw, probes=6, k=10)
+    assert np.array_equal(np.asarray(sq[2]), np.asarray(r[2])), dt + " n"
+    ov = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                  for a, b in zip(np.asarray(sq[1]), np.asarray(r[1]))])
+    assert ov >= floor, f"{dt} overlap {ov}"
+    ids_scores_n(ref.search(qw, probes=6, k=5, rescore=20),
+                 shq.search(qw, probes=6, k=5, rescore=20), dt + " rescore")
+    eq = shq.search_exact(qw, k=10)
+    assert np.array_equal(np.asarray(eq[1]), np.asarray(gi)), dt + " exact"
+
+# mutations repack lazily on the SAME engine object (version-keyed)
+new = normalize_fields(jax.random.normal(jax.random.PRNGKey(7), (3, 64)), spec)
+idx.add_documents(new)
+ids_scores_n(get_engine(idx, "reference").search(qw, probes=6, k=10),
+             sh.search(qw, probes=6, k=10), "post-add")
+idx.remove_documents([0, 1, 2])
+ids_scores_n(get_engine(idx, "reference").search(qw, probes=6, k=10),
+             sh.search(qw, probes=6, k=10), "post-remove")
+print("SHARDED_FUSED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fused_parity_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _FUSED_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert "SHARDED_FUSED_OK" in out.stdout, out.stdout + out.stderr

@@ -649,3 +649,79 @@ def test_escalation_validates_floor(built_index, engine_corpus):
         get_engine(built_index, "reference").search_escalating(
             docs[:2], probes=6, k=10, min_recall=1.5
         )
+
+
+# ------------------------------------------------------- sharded-fused path
+def test_sharded_navigation_runs_once(built_index, engine_corpus):
+    """The sharded engine computes leader top-p ONCE per search: the same
+    flat probe tensor feeds the replicated probe-dedup schedule and the
+    n_scored accounting (the old path navigated in the shard_map body AND
+    again on host for the cost numbers)."""
+    docs, _ = engine_corpus
+    eng = get_engine(built_index, "sharded", interpret=True)
+    calls = {"n": 0}
+    orig = type(eng)._flat_probes
+
+    def counting(self, nav, probes_t):
+        calls["n"] += 1
+        return orig(self, nav, probes_t)
+
+    try:
+        type(eng)._flat_probes = counting
+        eng.search(docs[20:28], probes=6, k=10)
+    finally:
+        type(eng)._flat_probes = orig
+    assert calls["n"] == 1
+
+
+def test_sharded_lazy_repack_on_mutation(engine_corpus):
+    """One engine object across add/remove: the shard-local pack re-places
+    itself on the first search after a version bump and stays in parity
+    with a fresh reference engine."""
+    docs, spec = engine_corpus
+    idx = ClusterPruneIndex.build(
+        docs, spec, 16, n_clusterings=3, method="fpf",
+        key=jax.random.PRNGKey(0),
+    )
+    eng = get_engine(idx, "sharded", interpret=True)
+    qw = docs[20:28]
+    eng.search(qw, probes=6, k=10)
+    v0 = eng._pack_version
+    idx.add_documents(jax.random.normal(jax.random.PRNGKey(5),
+                                        (3, spec.total_dim)))
+    out = eng.search(qw, probes=6, k=10)
+    assert eng._pack_version == idx.version != v0
+    ref = get_engine(idx, "reference").search(qw, probes=6, k=10)
+    _assert_parity(ref, out, "post-add sharded")
+    idx.remove_documents([0, 1])
+    out = eng.search(qw, probes=6, k=10)
+    ref = get_engine(idx, "reference").search(qw, probes=6, k=10)
+    _assert_parity(ref, out, "post-remove sharded")
+
+
+def test_sharded_engine_cached_and_opts_keyed(built_index):
+    """Sharded engines cache on the index like every backend, keyed by
+    opts (the default mesh is constructed inside __init__, so the opts
+    key stays hashable)."""
+    e1 = get_engine(built_index, "sharded", interpret=True)
+    e2 = get_engine(built_index, "sharded", interpret=True)
+    e3 = get_engine(built_index, "sharded", interpret=True, query_tile=8)
+    assert e1 is e2 and e1 is not e3
+
+
+@pytest.mark.parametrize("nq", [1, 5])
+def test_sharded_quantised_rescore_recovers_fp32(built_index, int8_index,
+                                                 engine_corpus, nq):
+    """int8 shard-local storage + the sharded rescore tail returns the
+    fp32 reference's exact ids and scores — the distributed rescore
+    (ownership masks + pmax all-reduce) is score-identical to the
+    single-device gather rescore."""
+    docs, _ = engine_corpus
+    qw = docs[30:30 + nq]
+    ref = get_engine(built_index, "reference").search(
+        qw, probes=6, k=5, rescore=25
+    )
+    out = get_engine(int8_index, "sharded", interpret=True).search(
+        qw, probes=6, k=5, rescore=25
+    )
+    _assert_parity(ref, out, "sharded int8 rescore")

@@ -248,3 +248,48 @@ def test_paper_ordering_on_structured_corpus(small_corpus):
     rec_o = float(jnp.mean(competitive_recall(ids_o, gt_i)))
     rec_p = float(jnp.mean(competitive_recall(ids_p, gt_i)))
     assert rec_o >= rec_p - 0.2, (rec_o, rec_p)
+
+
+def test_ensure_local_bucket_major_cache_and_invalidate(random_corpus):
+    """The shard-local bucket-major pack: LOCAL ids, sentinel-free -1
+    padding, per-shard-count caching, dropped on mutation, and int8
+    per-(shard, bucket) scales quartering the packed bytes."""
+    import dataclasses
+
+    docs, spec = random_corpus
+    idx = ClusterPruneIndex.build(docs, spec, 12, n_clusterings=3,
+                                  method="fpf")
+    n = idx.n_docs
+    data, ids, scales, n_local = idx.ensure_local_bucket_major(4)
+    s, tk, b_l, d = data.shape
+    assert s == 4 and n_local == -(-n // 4)
+    assert scales is None and data.dtype == jnp.float32
+    # LOCAL ids: in [-1, n_local); every live doc appears in every clustering
+    a = np.asarray(ids)
+    assert a.min() >= -1 and a.max() < n_local
+    t = idx.buckets.shape[0]
+    assert (a >= 0).sum() == t * n
+    # packed rows are the doc vectors they claim to be
+    dd = np.asarray(docs)
+    for sh in range(4):
+        rows = np.argwhere(a[sh] >= 0)[:5]
+        for bi, ci in rows:
+            gid = sh * n_local + a[sh, bi, ci]
+            np.testing.assert_allclose(
+                np.asarray(data[sh, bi, ci]), dd[gid], atol=1e-6
+            )
+    # cached per shard count; invalidated (and re-derived) on mutation
+    assert idx.ensure_local_bucket_major(4)[0] is data
+    assert idx.ensure_local_bucket_major(2)[3] == -(-n // 2)
+    idx.add_documents(jax.random.normal(jax.random.PRNGKey(3),
+                                        (1, spec.total_dim)))
+    data2, ids2, _, _ = idx.ensure_local_bucket_major(4)
+    assert data2 is not data
+    assert (np.asarray(ids2) >= 0).sum() == t * (n + 1)
+
+    # int8: quarter the packed bytes, scales per (shard, bucket)
+    i8 = dataclasses.replace(idx, bucket_data=None, bucket_scales=None,
+                             pack_dtype="int8")
+    d8, ids8, sc8, _ = i8.ensure_local_bucket_major(4)
+    assert d8.dtype == jnp.int8 and sc8.shape == d8.shape[:2]
+    assert d8.shape == data2.shape and data2.nbytes == 4 * d8.nbytes
