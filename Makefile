@@ -1,5 +1,5 @@
 .PHONY: test test-fast serve bench bench-preprocess bench-throughput \
-	bench-sharded bench-loadtest
+	bench-sharded bench-loadtest bench-chaos
 
 # Tier-1 verify (ROADMAP.md) + serving/benchmark smokes (incl. add/remove)
 test:
@@ -37,3 +37,11 @@ bench-sharded:
 # (fixed arrival rate) vs the sequential one-by-one baseline
 bench-loadtest:
 	PYTHONPATH=src python -m benchmarks.loadtest --scale quick
+
+# Chaos suite: closed-loop serving under injected faults (transient errors,
+# slow/hung/flapping replicas, failure storm) with hard assertions — parity
+# of non-degraded answers vs the sync path, min_recall/exact never silently
+# degraded, breaker trips AND recovers under flap, bounded p99 under hangs
+bench-chaos:
+	PYTHONPATH=src python -m benchmarks.loadtest --chaos --scale quick \
+		--backend reference

@@ -28,6 +28,14 @@ the engine". Results land in the ``serving`` section of
 ``BENCH_query.json`` via ``benchmarks.run``. Off-TPU the fused backend is
 interpret-mode (correctness smoke, not a speed claim); entries carry
 ``platform`` so CPU and TPU rows can never be compared by accident.
+
+``--chaos`` swaps the throughput loops for the fault-injection acceptance
+suite: the same closed-loop mix replayed against a fresh server per named
+fault profile (:data:`repro.serving.FAULT_PROFILES`), hard-asserting that
+every submit resolves, non-degraded answers are id-identical to the
+synchronous path, ``exact``/``min_recall`` requests are never silently
+degraded, the circuit breaker trips AND recovers under flapping, and the
+wedged-replica profiles keep the p99 within 3x the fault-free run.
 """
 
 from __future__ import annotations
@@ -40,7 +48,14 @@ import numpy as np
 
 from repro.core import Retriever, SearchRequest
 from repro.launch.serve import build_retriever
-from repro.serving import DeadlineExceeded, Overloaded, SearchServer
+from repro.serving import (
+    DeadlineExceeded,
+    FaultPolicy,
+    Overloaded,
+    ReplicaUnavailable,
+    ResilienceConfig,
+    SearchServer,
+)
 
 from .common import std_parser
 
@@ -190,6 +205,376 @@ def _loop_report(mode: str, results, errors, wall, **extra) -> dict:
     }
 
 
+# ------------------------------------------------------------ chaos harness
+# The fault-injection acceptance run (``--chaos``): the SAME closed-loop mix
+# per named fault profile, with hard assertions instead of vibes — every
+# submit resolves (answer or typed failure, nothing blocks), every completed
+# non-degraded response is id-identical to the synchronous path, degraded
+# answers are stamped and their recall cost measured, the breaker trips AND
+# recovers under flapping, and the hang profiles keep the closed-loop p99
+# within 3x the fault-free run (with a one-cold-timeout absolute floor so a
+# CI box's noisy fault-free p50 cannot flake the ratio).
+
+CHAOS_PROFILES = ("transient", "slow", "flap", "storm", "hang_flap")
+
+
+def _chaos_knobs(comp_p99_s: float, seed: int):
+    """Derive the chaos timeout/hang knobs from observed healthy compute.
+
+    Absolute knobs cannot work across platforms: one engine call is ~1 s
+    on the CPU reference backend and ~1 ms fused-on-TPU, and compute
+    under N concurrent replica dispatches on a CPU box runs several times
+    slower than the same call alone — a timeout below that contended
+    reality turns every healthy dispatch into a timeout storm that
+    cascades through retries (measured, not hypothetical). So the
+    fault-free profile runs first, effectively timeout-free, and its
+    CONTENDED compute p99 sizes everything else: the timeout floor at
+    that p99 (honest-but-slow is never a fault), the ceiling at 3x it,
+    the injected hang at 2x the ceiling (a wedged call always overshoots
+    the timeout), and the p99 acceptance floor at one ceiling + retry.
+    """
+    floor_s = max(0.05, comp_p99_s)
+    ceil_s = max(0.75, 3.0 * comp_p99_s)
+    cfg = ResilienceConfig(
+        timeout_floor_s=floor_s, timeout_ceil_s=ceil_s,
+        breaker_cooldown_s=0.5, backoff_base_s=0.005, seed=seed,
+    )
+    return cfg, max(2.0, 2.0 * ceil_s)
+
+
+def _chaos_policy(profile: str, seed: int, hang_s: float) -> FaultPolicy:
+    """Named profile with its hang duration rescaled to the platform."""
+    import dataclasses
+
+    from repro.serving import FAULT_PROFILES
+
+    profiles = {
+        idx: (dataclasses.replace(p, hang_s=hang_s) if p.hang_p else p)
+        for idx, p in FAULT_PROFILES[profile].items()
+    }
+    return FaultPolicy(profiles, seed=seed, name=profile)
+
+
+def _precompile_degraded(base: Retriever, requests) -> None:
+    """Compile the traces the degradation ladder can reach.
+
+    Degraded dispatches run at stepped-down probe budgets the healthy
+    traffic never uses; without this, the FIRST degraded batch of a chaos
+    run pays an XLA compile that dwarfs the attempt timeout and reads as
+    yet another fault. One synchronous pass per reachable rung keeps the
+    measured chaos runs about scheduling, not compilation.
+    """
+    from repro.serving import degrade_request
+
+    t, kk = base.index.counts.shape
+    warm, seen = [], set()
+    for req in requests:
+        shape = base.exec_shape(req)
+        for rung in (1, 2):
+            try:
+                dreq, _ = degrade_request(
+                    req, shape, rung=rung, ladder=base.index.ladder,
+                    total_probes=t * kk, n_clusterings=t,
+                    relax_floors=False,
+                )
+            except ValueError:
+                continue  # guaranteed request: never degraded, no trace
+            dshape = base.exec_shape(dreq)
+            if dshape not in seen:
+                seen.add(dshape)
+                warm.append(dreq)
+    if warm:
+        base.search(warm)
+        base._flush_request_caches()
+
+
+async def chaos_closed_loop(server: SearchServer,
+                            requests: list[SearchRequest],
+                            concurrency: int) -> tuple[dict, dict, float]:
+    """Closed loop that keeps per-request identity and typed failures.
+
+    Returns ``(results, errors, wall)`` with ``results[i]`` the response for
+    ``requests[i]`` (only completed ones present) and ``errors`` counting
+    typed failures — under chaos a typed failure is an ACCEPTABLE outcome,
+    silence is not.
+    """
+    results: dict[int, object] = {}
+    errors = {"expired": 0, "rejected": 0, "unavailable": 0}
+    cursor = iter(enumerate(requests))
+    t_start = time.perf_counter()
+
+    async def worker():
+        for i, req in cursor:
+            try:
+                results[i] = await server.submit(req)
+            except DeadlineExceeded:
+                errors["expired"] += 1
+            except ReplicaUnavailable:
+                errors["unavailable"] += 1
+            except Overloaded:
+                errors["rejected"] += 1
+
+    await asyncio.gather(
+        *(worker() for _ in range(min(concurrency, len(requests))))
+    )
+    return results, errors, time.perf_counter() - t_start
+
+
+async def _chaos_profile_run(retriever, requests, *, profile, cfg, policy,
+                             concurrency, window_s, replicas,
+                             max_queue_depth, max_batch=8) -> dict:
+    """One profile through a fresh server: warmup, measure, snapshot.
+
+    ``max_batch`` is capped low on purpose: fault handling is per
+    DISPATCH, and a server that coalesces the whole closed loop into
+    three giant batches gives the breaker/retry/hedge machinery almost
+    nothing to act on.
+    """
+    async with SearchServer(
+        retriever, window_s=window_s, replicas=replicas,
+        max_batch=max_batch, max_queue_depth=max_queue_depth,
+        resilience=cfg, fault_policy=policy,
+    ) as server:
+        # Warm each shape twice through the live (possibly faulty) pool:
+        # compiles the traces and seeds the per-shape compute p99 the
+        # timeout/hedge policy is derived from.
+        shapes_seen = {}
+        for req in requests:
+            shapes_seen.setdefault(retriever.exec_shape(req), req)
+        for req in shapes_seen.values():
+            warm = [req] * min(server.max_batch, len(requests))
+            for _ in range(2):
+                await asyncio.gather(
+                    *(server.submit(r) for r in warm),
+                    return_exceptions=True,  # typed failures ok in warmup
+                )
+        for rep in server.pool.replicas:
+            rep._flush_request_caches()
+        results, errors, wall = await chaos_closed_loop(
+            server, requests, concurrency
+        )
+        stats = server.stats.snapshot()
+        health = server.pool.health_snapshot()
+    lat = [r.latency_s for r in results.values()]
+    p50, p99 = _quantiles(lat)
+    return {
+        "mode": "chaos",
+        "profile": profile,
+        "n_requests": len(requests),
+        "completed": len(results),
+        "qps": round(len(results) / wall, 2) if wall > 0 else 0.0,
+        "p50_ms": round(p50, 3),
+        "p99_ms": round(p99, 3),
+        "wall_s": round(wall, 2),
+        **errors,
+        "retries": stats["retries"],
+        "timeouts": stats["timeouts"],
+        "hedges": stats["hedges"],
+        "hedge_wins": stats["hedge_wins"],
+        "degraded": stats["degraded"],
+        "budget_exhausted": stats["budget_exhausted"],
+        "breaker_trips": stats["breaker_trips"],
+        "breaker_recoveries": stats["breaker_recoveries"],
+        "_results": results,
+        "_health": health,
+    }
+
+
+def _chaos_verify(entry: dict, requests, expected,
+                  p99_free_ms: float | None) -> dict:
+    """Apply the hard acceptance assertions; fold parity/recall into entry."""
+    profile = entry["profile"]
+    results = entry.pop("_results")
+    health = entry.pop("_health")
+    entry["breaker_states"] = {h["idx"]: h["state"] for h in health}
+    entry["replica_dispatches"] = {
+        h["idx"]: f"{h['successes']}ok/{h['failures']}fail[{h['state']}]"
+        for h in health
+    }
+    n = len(requests)
+    resolved = entry["completed"] + sum(
+        entry[key] for key in ("expired", "rejected", "unavailable")
+    )
+    if resolved != n:
+        raise SystemExit(
+            f"[chaos:{profile}] {n - resolved} of {n} submits vanished — "
+            f"every request must resolve to an answer or a typed failure"
+        )
+    parity_bad, guard_degraded = 0, 0
+    deg_recall: list[float] = []
+    labels: dict[str, int] = {}
+    for i, resp in results.items():
+        want = expected[i]
+        if resp.degraded:
+            if requests[i].min_recall is not None or requests[i].exact:
+                guard_degraded += 1
+            got = set(map(int, resp.doc_ids))
+            truth = set(map(int, want.doc_ids))
+            deg_recall.append(len(got & truth) / max(1, len(truth)))
+            for lab in resp.degradation:
+                key = lab.split(":", 1)[0]
+                labels[key] = labels.get(key, 0) + 1
+        elif (list(resp.doc_ids) != list(want.doc_ids)
+              or not np.allclose(resp.scores, want.scores,
+                                 rtol=1e-5, atol=1e-6)):
+            parity_bad += 1
+    if parity_bad:
+        raise SystemExit(
+            f"[chaos:{profile}] {parity_bad} non-degraded responses differ "
+            f"from the synchronous path — retries/hedging may change "
+            f"latency, never answers"
+        )
+    if guard_degraded:
+        raise SystemExit(
+            f"[chaos:{profile}] {guard_degraded} exact/min_recall responses "
+            f"came back degraded=True — guaranteed requests must fail "
+            f"typed, never silently downgrade"
+        )
+    if profile in ("flap", "hang_flap"):
+        if not (entry["breaker_trips"] >= 1
+                and entry["breaker_recoveries"] >= 1):
+            raise SystemExit(
+                f"[chaos:{profile}] breaker did not trip AND recover under "
+                f"flapping (trips={entry['breaker_trips']}, "
+                f"recoveries={entry['breaker_recoveries']}); half-open "
+                f"probing is broken"
+            )
+    if profile in ("hang", "hang_flap") and p99_free_ms:
+        # 3x the fault-free p99, floored at one cold attempt-timeout +
+        # retry (the bound a single wedged dispatch can cost a request)
+        bound_ms = max(3.0 * p99_free_ms,
+                       1e3 * entry["timeout_ceil_s"] + 250.0)
+        if entry["p99_ms"] > bound_ms:
+            raise SystemExit(
+                f"[chaos:{profile}] closed-loop p99 {entry['p99_ms']:.0f} ms "
+                f"exceeds the bound {bound_ms:.0f} ms "
+                f"(fault-free p99 {p99_free_ms:.0f} ms)"
+            )
+        entry["p99_vs_fault_free"] = round(
+            entry["p99_ms"] / p99_free_ms, 2
+        )
+    entry["parity_violations"] = 0
+    entry["degraded_recall_mean"] = (
+        round(float(np.mean(deg_recall)), 3) if deg_recall else None
+    )
+    entry["degradation_kinds"] = labels
+    return entry
+
+
+def run_chaos(scale: str = "quick", seed: int = 0, *,
+              backend: str = "reference", concurrency: int = 32,
+              window_s: float = 0.002, replicas: int = 4,
+              max_queue_depth: int = 256, profiles=None,
+              n_docs: int | None = None,
+              n_requests: int | None = None) -> list[dict]:
+    """Chaos acceptance run: every named fault profile, hard-asserted.
+
+    Builds one calibrated index, computes the synchronous ground-truth
+    answer for every request in the mix, then replays the SAME closed-loop
+    mix against a fresh fault-injected server per profile. A run that
+    returns (exit 0) has proved: no lost submits, no silent wrong answers,
+    no silent downgrades of guaranteed requests, breaker trip + recovery
+    under flapping, and a bounded p99 with a wedged replica in the pool.
+    """
+    sz = LOADTEST_SIZES[scale]
+    n_docs = n_docs or sz["n_docs"]
+    n_requests = n_requests or sz["n_requests"]
+    profiles = tuple(profiles or CHAOS_PROFILES)
+    k = MIX_SHAPES[0]["k"]
+
+    retriever, docs, spec = build_retriever(
+        n_docs, backend=backend, seed=seed, calibrate=True,
+    )
+    requests = make_mix(n_docs, spec, n_requests, seed=seed)
+    # Guard requests: a recall floor the ladder can honour — these must be
+    # served at full fidelity or fail typed, NEVER silently degraded.
+    rng = np.random.default_rng(seed + 1)
+    for i in range(0, len(requests), 16):
+        qid = int(rng.integers(n_docs))
+        requests[i] = SearchRequest(like=qid, k=k, probes=12,
+                                    min_recall=0.85)
+    served = retriever.backend
+    platform = jax.default_backend()
+    print(f"\n# Chaos loadtest — fault-injected serving acceptance "
+          f"(n={n_docs}, {n_requests} requests, {replicas} replicas, "
+          f"backend={served}, platform={platform})")
+
+    # Synchronous ground truth on a fresh facade (one batched call; the
+    # min_recall guards calibrate the planner ladder here, once).
+    base = Retriever(retriever.index, backend=served,
+                     default_probes=retriever.default_probes,
+                     calibrate=True)
+    expected = base.search(requests)
+    _precompile_degraded(base, requests)
+    retriever._flush_request_caches()
+
+    async def _all():
+        # Fault-free pass first, with an effectively-unbounded timeout (a
+        # cold XLA compile must read as slow, not faulty): it is the
+        # parity/latency reference, and its compute p99 sizes the chaos
+        # timeout knobs for the fault runs.
+        free = await _chaos_profile_run(
+            retriever, requests, profile="none",
+            cfg=ResilienceConfig(seed=seed, timeout_floor_s=60.0,
+                                 timeout_ceil_s=60.0, hedge=False),
+            policy=None,
+            concurrency=concurrency, window_s=window_s, replicas=replicas,
+            max_queue_depth=max_queue_depth,
+        )
+        comp = [r.compute_s for r in free["_results"].values()]
+        comp_p99 = float(np.percentile(comp, 99)) if comp else 1.0
+        cfg, hang_s = _chaos_knobs(comp_p99, seed)
+        print(f"chaos knobs from fault-free compute p99 "
+              f"{comp_p99 * 1e3:.0f} ms: timeout ceiling "
+              f"{cfg.timeout_ceil_s:.2f} s, injected hang {hang_s:.1f} s")
+        entries = [free]
+        for profile in profiles:
+            entries.append(await _chaos_profile_run(
+                retriever, requests, profile=profile, cfg=cfg,
+                policy=_chaos_policy(profile, seed, hang_s),
+                concurrency=concurrency, window_s=window_s,
+                replicas=replicas, max_queue_depth=max_queue_depth,
+            ))
+        for entry in entries:
+            entry["timeout_ceil_s"] = (
+                None if entry["profile"] == "none" else cfg.timeout_ceil_s
+            )
+        return entries
+
+    entries = asyncio.run(_all())
+    p99_free_ms = entries[0]["p99_ms"]
+    failures = []
+    for entry in entries:
+        try:
+            _chaos_verify(entry, requests, expected,
+                          None if entry["profile"] == "none"
+                          else p99_free_ms)
+        except SystemExit as e:
+            failures.append(str(e))
+        extra = ""
+        if entry.get("degraded"):
+            extra = (f", degraded={entry['degraded']} "
+                     f"(recall {entry.get('degraded_recall_mean')})")
+        print(f"chaos[{entry['profile']:>9}]: {entry['qps']:7.1f} QPS, "
+              f"p50/p99 {entry['p50_ms']:6.1f}/{entry['p99_ms']:7.1f} ms, "
+              f"retries={entry['retries']} timeouts={entry['timeouts']} "
+              f"hedges={entry['hedges']}/{entry['hedge_wins']} "
+              f"trips={entry['breaker_trips']}/"
+              f"{entry['breaker_recoveries']} "
+              f"unavailable={entry['unavailable']}{extra}")
+        if "replica_dispatches" in entry:
+            print(f"      replicas: {entry['replica_dispatches']}")
+    if failures:
+        raise SystemExit("\n".join(failures))
+    print("chaos: all profiles passed parity, honesty, breaker and p99 "
+          "assertions")
+    labels = {"backend": served, "platform": platform}
+    for e in entries:
+        for key, val in labels.items():
+            e.setdefault(key, val)
+    return entries
+
+
 # ----------------------------------------------------------------- the runner
 async def _run_async(retriever, requests, *, concurrency, rate_qps,
                      window_s, replicas, max_queue_depth, deadline_s,
@@ -322,6 +707,15 @@ def run(scale: str = "quick", seed: int = 0, *, backend: str = "auto",
 def main():
     ap = std_parser(__doc__)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection acceptance suite instead "
+                         "of the throughput loops: every named fault "
+                         "profile through a fresh fault-injected server, "
+                         "hard-asserting parity, degradation honesty, "
+                         "breaker trip+recovery, and the hang-profile p99 "
+                         "bound (exit 1 on any violation)")
+    ap.add_argument("--profiles", default=",".join(CHAOS_PROFILES),
+                    help="--chaos: comma-separated fault profile names")
     ap.add_argument("--pack-dtype", default=None,
                     choices=[None, "float32", "bfloat16", "int8"],
                     help="bucket-major storage precision the fused/sharded "
@@ -346,6 +740,15 @@ def main():
     ap.add_argument("--mode", default="both",
                     choices=("closed", "open", "both"))
     args = ap.parse_args()
+    if args.chaos:
+        backend = "reference" if args.backend == "auto" else args.backend
+        run_chaos(args.scale, args.seed, backend=backend,
+                  concurrency=min(args.concurrency, 32),
+                  window_s=args.window_ms / 1e3,
+                  replicas=max(args.replicas, 4),
+                  profiles=tuple(p for p in args.profiles.split(",") if p),
+                  n_docs=args.docs, n_requests=args.requests)
+        return
     modes = ("closed", "open") if args.mode == "both" else (args.mode,)
     run(args.scale, args.seed, backend=args.backend,
         pack_dtype=(

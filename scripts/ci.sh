@@ -26,11 +26,17 @@
 #                           also through the async micro-batcher;
 #                           --min-recall: calibrated recall-floor
 #                           escalation, floor checked on held-out
-#                           queries), and the closed-loop serving load
+#                           queries), the closed-loop serving load
 #                           test (micro-batched QPS vs the sequential
-#                           baseline), so regressions anywhere in the
-#                           build->serve->mutate path fail CI, not just
-#                           unit tests
+#                           baseline), and the chaos suite (fault
+#                           injection into the replica pool: transient
+#                           errors, a wedged replica, a flapping one, a
+#                           failure storm — hard-asserting parity of
+#                           non-degraded answers, honest degradation
+#                           stamping, breaker trip AND recovery, and a
+#                           bounded p99 under hangs), so regressions
+#                           anywhere in the build->serve->mutate->fail
+#                           path fail CI, not just unit tests
 #
 # Extra args are forwarded to pytest in both modes.
 set -euo pipefail
@@ -84,4 +90,8 @@ if [[ "$FAST" == 0 ]]; then
   echo "[ci] smoke: serving load test (closed loop, reference backend)"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.loadtest --scale quick --backend reference --mode closed
+  echo "[ci] smoke: chaos suite (fault injection, hard parity/honesty/breaker"
+  echo "      /p99 assertions inside the harness — any violation exits non-zero)"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.loadtest --chaos --scale quick --backend reference
 fi

@@ -41,7 +41,7 @@ from .cluster import (
 )
 from .index import (
     LADDER_DRIFT_THRESHOLD, SUPPORTED_PACK_DTYPES, ClusterPruneIndex,
-    pack_buckets, pack_buckets_major, validate_pack_dtype,
+    CorruptIndexError, pack_buckets, pack_buckets_major, validate_pack_dtype,
 )
 from .engine import (
     BACKENDS,
@@ -86,7 +86,8 @@ __all__ = [
     "kmeans_cluster", "random_leader_cluster",
     "CLUSTERERS", "Clusterer", "assign_refine", "available_clusterers",
     "get_clusterer", "pick_clusterer", "register_clusterer",
-    "ClusterPruneIndex", "LADDER_DRIFT_THRESHOLD", "pack_buckets",
+    "ClusterPruneIndex", "CorruptIndexError", "LADDER_DRIFT_THRESHOLD",
+    "pack_buckets",
     "pack_buckets_major", "validate_pack_dtype", "SUPPORTED_PACK_DTYPES",
     "BACKENDS", "SearchEngine", "available_backends", "get_engine",
     "pick_backend", "register_backend", "split_probes", "sweep_probes",

@@ -400,6 +400,12 @@ class SearchRequest:
                 f"{spec.total_dim} (fields {list(spec.names)} "
                 f"dims {list(spec.dims)})"
             )
+        if not bool(jnp.all(jnp.isfinite(q))):
+            raise ValueError(
+                "query vector contains non-finite values (NaN/Inf); every "
+                "similarity against it would be garbage — fix the embedding "
+                "before searching"
+            )
         return normalize_fields(q, spec)
 
     def resolve_exclude(self) -> int:
@@ -455,6 +461,14 @@ class SearchResponse:
     them), or ``"exact"`` (the full T·K sweep answered, whether requested
     via ``exact=True`` or reached as the escalation ceiling; its
     ``predicted_recall`` is exactly 1.0 and ``probes`` is T·K).
+
+    ``degraded`` marks an answer the serving tier walked DOWN the quality
+    ladder under overload or replica faults (:mod:`repro.serving.health`);
+    ``degradation`` records each applied downgrade as an audit label
+    (e.g. ``"rescore:64->none"``, ``"probes:48->24"``), and
+    ``predicted_recall``/``probes`` describe the budget that actually
+    served — so a degraded answer is cheaper but never dishonest. The
+    synchronous path never degrades (both fields keep their defaults).
     """
 
     hits: tuple[Hit, ...]
@@ -470,6 +484,8 @@ class SearchResponse:
     compute_s: float = 0.0
     tier: str = "approx"
     escalations: int = 0
+    degraded: bool = False
+    degradation: tuple[str, ...] = ()
 
     def __len__(self) -> int:
         return len(self.hits)

@@ -50,10 +50,21 @@ from .fields import FieldSpec, normalize_fields
 from .weights import weighted_query
 
 __all__ = [
-    "ClusterPruneIndex", "pack_buckets", "pack_buckets_major",
-    "validate_pack_dtype", "SUPPORTED_PACK_DTYPES",
+    "ClusterPruneIndex", "CorruptIndexError", "pack_buckets",
+    "pack_buckets_major", "validate_pack_dtype", "SUPPORTED_PACK_DTYPES",
     "LADDER_DRIFT_THRESHOLD",
 ]
+
+
+class CorruptIndexError(Exception):
+    """A saved index failed to load: truncated, mismatched or unreadable.
+
+    Raised by :meth:`ClusterPruneIndex.load` with the failing artifact
+    (file, or archive member) NAMED, instead of whatever opaque
+    numpy/zipfile traceback the corruption would otherwise surface as.
+    :meth:`ClusterPruneIndex.save` writes atomically (temp file + rename)
+    precisely so a crash mid-save leaves the previous index intact rather
+    than a file that raises this."""
 
 # Storage precisions the bucket-major pack (and the fused scoring kernel)
 # support. fp32 = corpus dtype; bf16 halves the packed bytes (plain cast);
@@ -545,11 +556,41 @@ class ClusterPruneIndex:
         per-bucket int8 ``bucket_scales`` ARE, as is the ladder, so a loaded
         index keeps its honest ``recall_target=`` planning without re-paying
         the calibration sweep — and keeps knowing when that ladder went
-        stale."""
-        import json
+        stale.
 
+        The write is CRASH-SAFE: bytes go to a temp file in the target
+        directory first and only an atomic ``os.replace`` publishes them
+        under the final name, so a crash (or full disk) mid-save leaves
+        any previous save untouched instead of a truncated archive."""
+        import json
+        import os
+        import tempfile
+
+        # np.savez appends ".npz" to suffix-less paths; pin the FINAL name
+        # first so the atomic rename publishes exactly what load expects.
+        final = os.fspath(path)
+        if not final.endswith(".npz"):
+            final += ".npz"
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(final) or ".",
+            prefix=os.path.basename(final) + ".tmp.",
+        )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                self._write_npz(f, json)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _write_npz(self, f, json) -> None:
         np.savez_compressed(
-            path,
+            f,
             docs=np.asarray(self.docs),
             leaders=np.asarray(self.leaders),
             buckets=np.asarray(self.buckets),
@@ -580,42 +621,99 @@ class ClusterPruneIndex:
 
     @classmethod
     def load(cls, path) -> "ClusterPruneIndex":
-        """Inverse of :meth:`save` (ladder + mutation state included)."""
+        """Inverse of :meth:`save` (ladder + mutation state included).
+
+        Raises :class:`CorruptIndexError` naming the failing artifact on a
+        truncated, mismatched or unreadable file — a clear diagnosis at
+        the one place that knows which file and which member broke,
+        instead of an opaque numpy/zipfile traceback from deep inside the
+        decompressor."""
         import json
+        import os
+        import zipfile
 
         from .calibrate import ProbeLadder
         from .fields import FieldSpec
 
-        z = np.load(path, allow_pickle=False)
-        assign = z["assign"]
-        ladder_json = str(z["ladder"])
-        removed = z["removed"] if "removed" in z.files else np.zeros(0, bool)
-        scales = (
-            z["bucket_scales"] if "bucket_scales" in z.files
-            else np.zeros((0, 0), np.float32)
-        )
-        return cls(
-            spec=FieldSpec(
-                names=tuple(str(n) for n in z["names"]),
-                dims=tuple(int(d) for d in z["dims"]),
-            ),
-            docs=jnp.asarray(z["docs"]),
-            leaders=jnp.asarray(z["leaders"]),
-            buckets=jnp.asarray(z["buckets"]),
-            counts=jnp.asarray(z["counts"]),
-            method=str(z["method"]),
-            assign=assign if assign.size else None,
-            ladder=(
+        fname = os.fspath(path)
+        try:
+            z = np.load(path, allow_pickle=False)
+        except FileNotFoundError:
+            raise
+        except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+            raise CorruptIndexError(
+                f"saved index {fname!r} is not a readable .npz archive "
+                f"(truncated save or not an index file): {e}"
+            ) from e
+
+        def member(key, required=True, default=None):
+            """One eagerly-decompressed member; truncation inside the
+            archive surfaces HERE, so the error can name the member."""
+            if key not in z.files:
+                if required:
+                    raise CorruptIndexError(
+                        f"saved index {fname!r} is missing required "
+                        f"member {key!r} (have {sorted(z.files)})"
+                    )
+                return default
+            try:
+                return z[key]
+            except Exception as e:
+                raise CorruptIndexError(
+                    f"member {key!r} of saved index {fname!r} failed to "
+                    f"decompress (truncated or corrupt archive): {e}"
+                ) from e
+
+        assign = member("assign")
+        ladder_json = str(member("ladder"))
+        removed = member("removed", required=False,
+                         default=np.zeros(0, bool))
+        scales = member("bucket_scales", required=False,
+                        default=np.zeros((0, 0), np.float32))
+        try:
+            ladder = (
                 ProbeLadder.from_dict(json.loads(ladder_json))
                 if ladder_json else None
+            )
+        except (ValueError, KeyError, TypeError) as e:
+            raise CorruptIndexError(
+                f"member 'ladder' of saved index {fname!r} holds invalid "
+                f"calibration JSON: {e}"
+            ) from e
+        docs = member("docs")
+        names = member("names")
+        dims = member("dims")
+        if docs.ndim != 2:
+            raise CorruptIndexError(
+                f"member 'docs' of saved index {fname!r} has shape "
+                f"{docs.shape}, expected a 2-D (n, D) corpus"
+            )
+        if int(np.sum(np.asarray(dims, np.int64))) != int(docs.shape[1]):
+            raise CorruptIndexError(
+                f"saved index {fname!r} is internally inconsistent: field "
+                f"dims {list(int(d) for d in dims)} sum to "
+                f"{int(np.sum(np.asarray(dims, np.int64)))} but 'docs' has "
+                f"dim {int(docs.shape[1])} (mismatched members — partial "
+                f"overwrite?)"
+            )
+        return cls(
+            spec=FieldSpec(
+                names=tuple(str(n) for n in names),
+                dims=tuple(int(d) for d in dims),
             ),
+            docs=jnp.asarray(docs),
+            leaders=jnp.asarray(member("leaders")),
+            buckets=jnp.asarray(member("buckets")),
+            counts=jnp.asarray(member("counts")),
+            method=str(member("method")),
+            assign=assign if assign.size else None,
+            ladder=ladder,
             removed=removed if removed.size else None,
-            n_mutations=(
-                int(z["n_mutations"]) if "n_mutations" in z.files else 0
+            n_mutations=int(
+                member("n_mutations", required=False, default=0)
             ),
             pack_dtype=validate_pack_dtype(
-                (str(z["pack_dtype"]) or None)
-                if "pack_dtype" in z.files else None
+                str(member("pack_dtype", required=False, default="")) or None
             ),
             bucket_scales=jnp.asarray(scales) if scales.size else None,
         )

@@ -99,8 +99,13 @@ def weighted_query(
       spec: the corpus field spec.
       normalize: if False returns raw ``Q_w`` (used by tests/the theorem).
     """
-    if not isinstance(q, jnp.ndarray):
+    if isinstance(q, (list, tuple)):
+        # Only genuine sequences are per-field lists. A bare np.ndarray is a
+        # concatenated (..., D) query — iterating it would concat the batch
+        # rows into one giant flat vector.
         q = concat_fields(list(q))
+    else:
+        q = jnp.asarray(q)
     qw = q * expand_weights(w, spec)
     if not normalize:
         return qw

@@ -137,28 +137,49 @@ def serve_requests(retriever: Retriever, requests):
 
 
 def serve_async(retriever: Retriever, requests, *, window_s: float = 0.002,
-                replicas: int = 1, deadline_s: float | None = None):
+                replicas: int = 1, deadline_s: float | None = None,
+                chaos: str | None = None, seed: int = 0):
     """Drive requests through the async micro-batching tier.
 
     Every request is submitted concurrently (the serving tier's intended
     traffic shape — the micro-batch window coalesces them into engine-sized
-    batches). Returns ``(responses, stats_line)`` with responses in request
-    order; each response carries the per-request ``queue_wait_s`` /
-    ``compute_s`` latency split stamped by the server.
+    batches). Returns ``(responses, stats_line, health)`` with responses in
+    request order; each response carries the per-request ``queue_wait_s`` /
+    ``compute_s`` latency split stamped by the server, and ``health`` is
+    the final per-replica health snapshot (breaker state, EWMA latency,
+    success/failure counts).
+
+    ``chaos`` names a fault profile from
+    :data:`repro.serving.FAULT_PROFILES` to inject into the replica pool;
+    under chaos an individual response slot may hold a typed serving
+    exception (:class:`~repro.serving.ServingError`) instead of a
+    response — a typed failure is an acceptable chaos outcome, a hang or
+    a silent wrong answer is not.
     """
     import asyncio
 
-    from repro.serving import SearchServer
+    from repro.serving import FaultPolicy, ResilienceConfig, SearchServer
+
+    policy = FaultPolicy.named(chaos, seed=seed) if chaos else None
+    cfg = ResilienceConfig(seed=seed) if chaos else None
+    # Fault handling is per dispatch: one giant coalesced batch gives the
+    # breaker/retry machinery a single roll of the dice, so under chaos cap
+    # the batch size to spread work across replicas.
+    max_batch = 8 if chaos else None  # None -> default_max_batch
 
     async def _run():
         async with SearchServer(retriever, window_s=window_s,
-                                replicas=replicas) as server:
+                                replicas=replicas, max_batch=max_batch,
+                                resilience=cfg,
+                                fault_policy=policy) as server:
             resps = await asyncio.gather(
                 *(server.submit(r, deadline_s=deadline_s)
-                  for r in requests)
+                  for r in requests),
+                return_exceptions=bool(chaos),
             )
             line = server.stats.format_line()
-        return list(resps), line
+            health = server.pool.health_snapshot()
+        return list(resps), line, health
 
     return asyncio.run(_run())
 
@@ -199,6 +220,13 @@ def main():
                     help="--serve micro-batch window")
     ap.add_argument("--replicas", type=int, default=1,
                     help="--serve parallel dispatch slots")
+    ap.add_argument("--chaos", default=None, metavar="PROFILE",
+                    help="inject a named fault profile (repro.serving."
+                         "FAULT_PROFILES, e.g. hang_flap) into the --serve "
+                         "replica pool and print the per-replica health "
+                         "report; implies --serve, and sizes the pool to "
+                         "at least 4 replicas so every profile index is "
+                         "populated")
     ap.add_argument("--mutate", type=int, default=0, metavar="N",
                     help="after serving, add N new documents through "
                          "retriever.add (incremental bucket maintenance, no "
@@ -209,6 +237,14 @@ def main():
                        or args.min_recall is not None):
         ap.error("--exact already guarantees recall 1.0; it cannot combine "
                  "with --recall-target or --min-recall")
+    if args.chaos is not None:
+        from repro.serving import FAULT_PROFILES
+
+        if args.chaos not in FAULT_PROFILES:
+            ap.error(f"--chaos {args.chaos!r}: unknown profile; known: "
+                     f"{', '.join(sorted(FAULT_PROFILES))}")
+        args.serve = True
+        args.replicas = max(args.replicas, 4)
 
     # Materialise the bucket-major layout at build time whenever the fused
     # backend may serve — the engine would otherwise do it on first search.
@@ -353,27 +389,50 @@ def main():
             exact=args.exact, min_recall=args.min_recall,
         )
         retriever._flush_request_caches()
+        if args.chaos:
+            from repro.serving import FaultPolicy
+
+            print(f"[serve] chaos: injecting "
+                  f"{FaultPolicy.named(args.chaos, seed=args.seed).describe()} "
+                  f"across {args.replicas} replicas")
         t0 = time.time()
-        async_resps, stats_line = serve_async(
+        async_resps, stats_line, health = serve_async(
             retriever, requests, window_s=args.window_ms / 1e3,
-            replicas=args.replicas,
+            replicas=args.replicas, chaos=args.chaos, seed=args.seed,
         )
         dt = time.time() - t0
         retriever._flush_request_caches()
         one_by_one = [retriever.search(r) for r in requests]
+        # Under chaos a slot may hold a typed failure or a degraded=True
+        # answer — both are honest outcomes; a non-degraded response that
+        # differs from the synchronous path is the only lie.
+        ok_resps = [r for r in async_resps if not isinstance(r, Exception)]
+        failed = len(async_resps) - len(ok_resps)
+        degraded = sum(1 for r in ok_resps if r.degraded)
         mismatches = sum(
             1 for a, b in zip(async_resps, one_by_one)
-            if list(a.doc_ids) != list(b.doc_ids)
-            or not np.allclose(a.scores, b.scores, rtol=1e-5, atol=1e-6)
+            if not isinstance(a, Exception) and not a.degraded
+            and (list(a.doc_ids) != list(b.doc_ids)
+                 or not np.allclose(a.scores, b.scores,
+                                    rtol=1e-5, atol=1e-6))
         )
-        waits = np.asarray([r.queue_wait_s for r in async_resps]) * 1e3
-        comps = np.asarray([r.compute_s for r in async_resps]) * 1e3
+        waits = np.asarray([r.queue_wait_s for r in ok_resps]) * 1e3
+        comps = np.asarray([r.compute_s for r in ok_resps]) * 1e3
         print(f"[serve] async tier: {len(requests)} concurrent submits in "
               f"{dt * 1e3:.1f} ms (mean batch "
-              f"{np.mean([r.batch_size for r in async_resps]):.1f}, wait "
+              f"{np.mean([r.batch_size for r in ok_resps]):.1f}, wait "
               f"p50 {np.percentile(waits, 50):.1f} ms, compute p50 "
               f"{np.percentile(comps, 50):.1f} ms)")
         print(f"[serve] async stats: {stats_line}")
+        if args.chaos:
+            print(f"[serve] chaos outcome: {len(ok_resps)} answered "
+                  f"({degraded} degraded), {failed} failed typed")
+            for h in health:
+                print(f"[serve] replica {h['idx']}: {h['state']:>9} "
+                      f"ewma={h['ewma_ms']} ms, "
+                      f"{h['successes']}/{h['dispatches']} ok, "
+                      f"{h['timeouts']} timeouts, trips "
+                      f"{h['trips']}/{h['recoveries']} recovered")
         print(f"[serve] async parity vs one-by-one: {mismatches} "
               f"mismatches ({'OK' if mismatches == 0 else 'FAIL'})")
         if mismatches:

@@ -19,6 +19,19 @@ Layout (policy/mechanism/loop kept separate, each independently testable):
     scheduler.py  typed failures + admission/expiry/ordering policy
     server.py     SearchServer event loop, ReplicaPool, executor dispatch
     stats.py      counters, batch-size histogram, p50/p99 wait/compute split
+    health.py     circuit breaker, retry budget, EWMA health, degradation
+    faults.py     deterministic fault injection (the chaos harness's seam)
+
+The tier is fault-tolerant by default: per-shape dispatch timeouts derived
+from observed p99 compute, retries on a different replica under capped
+jittered backoff and a token-bucket retry budget, hedged dispatch for
+batches stuck past the shape's p99, a per-replica circuit breaker, and a
+degradation ladder (drop rescore, step probes down a calibrated rung)
+that answers ``degraded=True`` instead of shedding — while ``exact=``/
+``min_recall=`` requests fail typed (:class:`ReplicaUnavailable`) rather
+than ever being silently downgraded. Tune it all through
+:class:`ResilienceConfig`; chaos-test it with ``python -m
+benchmarks.loadtest --chaos``.
 
 Copy-paste usage::
 
@@ -56,19 +69,30 @@ drive it end to end with ``python -m repro.launch.serve --serve``.
 """
 
 from .batcher import Batcher, ShapeQueue
+from .faults import FAULT_PROFILES, FaultPolicy, FaultProfile, InjectedFault
+from .health import (
+    CircuitBreaker,
+    ReplicaHealth,
+    ResilienceConfig,
+    RetryBudget,
+    degrade_batch,
+    degrade_request,
+)
 from .scheduler import (
     DeadlineExceeded,
     Overloaded,
+    ReplicaUnavailable,
     Scheduler,
     ServingError,
     Ticket,
 )
-from .server import ReplicaPool, SearchServer, default_max_batch
+from .server import Replica, ReplicaPool, SearchServer, default_max_batch
 from .stats import ServerStats
 
 __all__ = [
     "SearchServer",
     "ReplicaPool",
+    "Replica",
     "default_max_batch",
     "Batcher",
     "ShapeQueue",
@@ -77,5 +101,16 @@ __all__ = [
     "ServingError",
     "DeadlineExceeded",
     "Overloaded",
+    "ReplicaUnavailable",
     "ServerStats",
+    "ResilienceConfig",
+    "CircuitBreaker",
+    "RetryBudget",
+    "ReplicaHealth",
+    "degrade_request",
+    "degrade_batch",
+    "FaultPolicy",
+    "FaultProfile",
+    "FAULT_PROFILES",
+    "InjectedFault",
 ]

@@ -45,6 +45,7 @@ __all__ = [
     "ServingError",
     "DeadlineExceeded",
     "Overloaded",
+    "ReplicaUnavailable",
     "Ticket",
     "Scheduler",
 ]
@@ -60,6 +61,13 @@ class DeadlineExceeded(ServingError):
 
 class Overloaded(ServingError):
     """The request was refused or shed because a bounded queue was full."""
+
+
+class ReplicaUnavailable(ServingError):
+    """Every eligible replica failed/timed out within the retry budget and
+    the request could not be served degraded (``exact=True`` and
+    ``min_recall=`` requests refuse degradation — they fail typed here
+    rather than return a silently-worse answer)."""
 
 
 @dataclasses.dataclass(eq=False)
@@ -114,10 +122,16 @@ class Scheduler:
         The load-shedding knob: when True (default), a full queue admits a
         higher-priority newcomer by shedding its lowest-priority waiter;
         when False a full queue rejects every newcomer outright.
+    ``on_expired``
+        Optional callback invoked with each ticket failed by deadline
+        expiry — wherever the expiry happens (:meth:`expire` sweeps AND
+        the admission-time purge). The server wires its stats counter
+        here so expiry is counted exactly once.
     """
 
     def __init__(
-        self, *, max_queue_depth: int = 256, shed_low_priority: bool = True
+        self, *, max_queue_depth: int = 256, shed_low_priority: bool = True,
+        on_expired=None,
     ):
         if max_queue_depth < 1:
             raise ValueError(
@@ -125,6 +139,24 @@ class Scheduler:
             )
         self.max_queue_depth = max_queue_depth
         self.shed_low_priority = shed_low_priority
+        self.on_expired = on_expired
+
+    # ---------------------------------------------------------------- expiry
+    def _fail_expired(self, queue: "ShapeQueue", now: float) -> list[Ticket]:
+        """Remove + fail ``queue``'s expired waiters (shared by the sweep
+        and the admission-time purge, so both report via ``on_expired``)."""
+        dead = queue.take_expired(now)
+        for t in dead:
+            t.fail(
+                DeadlineExceeded(
+                    f"deadline passed after {now - t.t_enqueue:.4f}s in "
+                    f"the queue for shape {tuple(t.shape)} (waited past "
+                    f"its {t.deadline - t.t_enqueue:.4f}s budget)"
+                )
+            )
+            if self.on_expired is not None:
+                self.on_expired(t)
+        return dead
 
     # ------------------------------------------------------------- admission
     def admit(self, queue: "ShapeQueue", ticket: Ticket) -> Ticket | None:
@@ -133,8 +165,18 @@ class Scheduler:
         Raises :class:`Overloaded` when the queue is full and shedding is
         off (or cannot find a strictly lower-priority victim). A returned
         victim has already had its future failed with :class:`Overloaded`.
+
+        A full queue first reclaims the slots of waiters whose deadline
+        has already passed (failing them :class:`DeadlineExceeded`, the
+        answer they were due anyway): an expired waiter holds no real
+        capacity, so it must never push a live newcomer into
+        :class:`Overloaded` — previously those slots were only reclaimed
+        on the serving loop's next sweep, so a burst of expired waiters
+        spuriously rejected live traffic.
         """
         victim = None
+        if len(queue) >= self.max_queue_depth:
+            self._fail_expired(queue, ticket.t_enqueue)
         if len(queue) >= self.max_queue_depth:
             if self.shed_low_priority:
                 victim = queue.lowest_priority()
@@ -157,22 +199,13 @@ class Scheduler:
         queue.append(ticket)
         return victim
 
-    # ---------------------------------------------------------------- expiry
     def expire(
         self, queues: Iterable["ShapeQueue"], now: float
     ) -> list[Ticket]:
         """Remove + fail every queued ticket whose deadline passed."""
         dead: list[Ticket] = []
         for q in queues:
-            for t in q.take_expired(now):
-                t.fail(
-                    DeadlineExceeded(
-                        f"deadline passed after {now - t.t_enqueue:.4f}s in "
-                        f"the queue for shape {tuple(t.shape)} (waited past "
-                        f"its {t.deadline - t.t_enqueue:.4f}s budget)"
-                    )
-                )
-                dead.append(t)
+            dead.extend(self._fail_expired(q, now))
         return dead
 
     # -------------------------------------------------------------- ordering

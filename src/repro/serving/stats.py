@@ -58,12 +58,26 @@ class ServerStats:
         self.shed = 0            # evicted from a full queue by priority
         self.failed = 0          # dispatch raised (engine/search error)
         self.batches = 0         # engine dispatches
+        # fault-tolerance counters (repro.serving.health wiring)
+        self.retries = 0         # re-dispatches after a failed attempt
+        self.timeouts = 0        # dispatch attempts that hit their timeout
+        self.hedges = 0          # speculative duplicate dispatches fired
+        self.hedge_wins = 0      # hedges that answered before the primary
+        self.degraded = 0        # responses served down the ladder
+        self.breaker_trips = 0   # circuits opened
+        self.breaker_recoveries = 0  # circuits closed by a half-open probe
+        self.budget_exhausted = 0    # retries refused by the token bucket
         self.batch_sizes: collections.Counter = collections.Counter()
         self._queue_wait: collections.deque = collections.deque(
             maxlen=reservoir
         )
         self._compute: collections.deque = collections.deque(maxlen=reservoir)
         self._latency: collections.deque = collections.deque(maxlen=reservoir)
+        # per-exec-shape compute reservoirs: the observed-p99 source the
+        # dispatcher derives per-shape timeouts and hedge delays from
+        # (smaller cap — there is one deque per distinct shape)
+        self._shape_compute: dict = {}
+        self._shape_reservoir = min(512, reservoir)
 
     # ------------------------------------------------------------- recording
     def record_submit(self) -> None:
@@ -81,6 +95,30 @@ class ServerStats:
     def record_failed(self, n: int = 1) -> None:
         self.failed += n
 
+    def record_retry(self) -> None:
+        self.retries += 1
+
+    def record_timeout(self) -> None:
+        self.timeouts += 1
+
+    def record_hedge(self) -> None:
+        self.hedges += 1
+
+    def record_hedge_win(self) -> None:
+        self.hedge_wins += 1
+
+    def record_degraded(self, n: int = 1) -> None:
+        self.degraded += n
+
+    def record_breaker_trip(self) -> None:
+        self.breaker_trips += 1
+
+    def record_breaker_recovery(self) -> None:
+        self.breaker_recoveries += 1
+
+    def record_budget_exhausted(self) -> None:
+        self.budget_exhausted += 1
+
     def record_batch(self, queue_waits, compute_s: float) -> None:
         """One dispatched batch: per-request waits + the shared compute."""
         n = len(queue_waits)
@@ -91,6 +129,25 @@ class ServerStats:
             self._queue_wait.append(w)
             self._latency.append(w + compute_s)
         self._compute.append(compute_s)
+
+    def record_shape_compute(self, shape, compute_s: float) -> None:
+        """One successful dispatch attempt's compute, keyed by exec shape."""
+        series = self._shape_compute.get(shape)
+        if series is None:
+            series = self._shape_compute[shape] = collections.deque(
+                maxlen=self._shape_reservoir
+            )
+        series.append(compute_s)
+
+    def shape_p99(self, shape) -> float | None:
+        """Observed p99 compute (seconds) for a shape, None before any
+        dispatch of it completed — the timeout/hedge-delay input."""
+        series = self._shape_compute.get(shape)
+        if not series:
+            return None
+        return float(
+            np.percentile(np.asarray(series, np.float64), 99)
+        )
 
     # ------------------------------------------------------------- reporting
     @property
@@ -111,6 +168,14 @@ class ServerStats:
             "shed": self.shed,
             "failed": self.failed,
             "batches": self.batches,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "hedges": self.hedges,
+            "hedge_wins": self.hedge_wins,
+            "degraded": self.degraded,
+            "breaker_trips": self.breaker_trips,
+            "breaker_recoveries": self.breaker_recoveries,
+            "budget_exhausted": self.budget_exhausted,
             "mean_batch_size": round(self.mean_batch_size, 2),
             "batch_size_hist": {
                 int(n): int(c) for n, c in sorted(self.batch_sizes.items())
@@ -142,11 +207,22 @@ class ServerStats:
             )
             if s["queue_depth"] else ""
         )
+        faults = ""
+        if (
+            s["retries"] or s["timeouts"] or s["hedges"] or s["degraded"]
+            or s["breaker_trips"]
+        ):
+            faults = (
+                f"retries={s['retries']} timeouts={s['timeouts']} "
+                f"hedges={s['hedges']}/{s['hedge_wins']} "
+                f"degraded={s['degraded']} "
+                f"trips={s['breaker_trips']}/{s['breaker_recoveries']} "
+            )
         return (
             f"served={s['completed']}/{s['submitted']} "
             f"batches={s['batches']} (mean {s['mean_batch_size']:.1f}) "
             f"expired={s['expired']} rejected={s['rejected']} "
-            f"shed={s['shed']} failed={s['failed']} | "
+            f"shed={s['shed']} failed={s['failed']} {faults}| "
             f"wait p50/p99 {s['queue_wait_ms']['p50']:.2f}/"
             f"{s['queue_wait_ms']['p99']:.2f} ms, "
             f"compute {s['compute_ms']['p50']:.2f}/"

@@ -89,6 +89,53 @@ def test_query_routing_errors(retriever):
         retriever.search(SearchRequest(query=jnp.ones((7,))))
 
 
+def test_non_finite_queries_rejected_on_every_path(retriever):
+    """A NaN/Inf query embedding raises at the API boundary on BOTH query
+    forms — concatenated vector and per-field sequence — instead of
+    silently poisoning every similarity downstream."""
+    D = retriever.spec.total_dim
+    bad = np.ones(D, np.float32)
+    bad[3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        retriever.search(SearchRequest(query=bad))
+    bad[3] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        retriever.search(SearchRequest(query=bad))
+    # per-field form: one poisoned field block is enough to reject
+    fields = [np.ones(d, np.float32) for d in retriever.spec.dims]
+    fields[1][0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        retriever.search(SearchRequest(query=fields))
+    # a finite vector of the same shapes still routes fine
+    ok = [np.ones(d, np.float32) for d in retriever.spec.dims]
+    assert retriever.search(SearchRequest(query=ok, probes=4, k=3)).hits
+
+
+def test_numpy_batch_query_not_split_as_fields(retriever):
+    """Regression: weighted_query must treat a bare np.ndarray batch
+    (nq, D) as concatenated queries, not iterate it as a per-field list
+    (which concatenated the batch rows into one giant flat vector). The
+    all-MLT batched path feeds exactly that — index.docs is numpy."""
+    from repro.core import weighted_query
+
+    spec = retriever.spec
+    q_np = np.asarray(retriever.index.docs[:4])
+    w = np.full((4, spec.s), 1.0 / spec.s, np.float32)
+    out = weighted_query(q_np, w, spec)
+    assert out.shape == q_np.shape                # batch shape preserved
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(weighted_query(jnp.asarray(q_np), w, spec)),
+        atol=1e-6,
+    )
+    # end to end: a >=2 all-MLT batch matches one-by-one search
+    reqs = [SearchRequest(like=i, probes=6, k=5) for i in range(3)]
+    batch = retriever.search(reqs)
+    for req, resp in zip(reqs, batch):
+        solo = retriever.search(req)
+        assert np.array_equal(resp.doc_ids, solo.doc_ids)
+        np.testing.assert_allclose(resp.scores, solo.scores, atol=1e-6)
+
+
 @pytest.mark.parametrize("bad", [(-0.5, 1.0, 0.5), (0.0, 0.0, 0.0)])
 def test_weights_validated_at_api_boundary(retriever, bad):
     """Negative / all-zero weights raise instead of producing NaN rankings."""

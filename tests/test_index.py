@@ -8,6 +8,7 @@ import pytest
 from repro.core import (
     CellDecIndex,
     ClusterPruneIndex,
+    CorruptIndexError,
     brute_force_bottomk,
     brute_force_topk,
     competitive_recall,
@@ -293,3 +294,88 @@ def test_ensure_local_bucket_major_cache_and_invalidate(random_corpus):
     d8, ids8, sc8, _ = i8.ensure_local_bucket_major(4)
     assert d8.dtype == jnp.int8 and sc8.shape == d8.shape[:2]
     assert d8.shape == data2.shape and data2.nbytes == 4 * d8.nbytes
+
+
+# ------------------------------------------------------- persistence safety
+def _built_index(random_corpus):
+    docs, spec = random_corpus
+    return ClusterPruneIndex.build(docs, spec, 12, n_clusterings=3,
+                                   key=jax.random.PRNGKey(1))
+
+
+def test_save_is_atomic_no_temp_debris(tmp_path, random_corpus):
+    """save publishes via os.replace: the final file appears complete, no
+    .tmp files survive, and a re-save over an existing file never leaves a
+    mixed state (the previous archive stays intact until the rename)."""
+    idx = _built_index(random_corpus)
+    path = tmp_path / "idx"                       # suffix-less: .npz appended
+    idx.save(path)
+    final = tmp_path / "idx.npz"
+    assert final.exists()
+    assert [p.name for p in tmp_path.iterdir()] == ["idx.npz"]
+    before = final.read_bytes()
+    idx.save(path)                                # overwrite in place
+    assert [p.name for p in tmp_path.iterdir()] == ["idx.npz"]
+    loaded = ClusterPruneIndex.load(final)
+    np.testing.assert_array_equal(np.asarray(loaded.docs),
+                                  np.asarray(idx.docs))
+    assert len(before) > 0
+
+
+def test_load_truncated_archive_raises_typed(tmp_path, random_corpus):
+    """A half-written/garbage file raises CorruptIndexError naming the
+    file — not an opaque zipfile/numpy traceback."""
+    idx = _built_index(random_corpus)
+    path = tmp_path / "idx.npz"
+    idx.save(path)
+    blob = path.read_bytes()
+
+    # truncation mid-archive: decompression of some member fails
+    cut = tmp_path / "cut.npz"
+    cut.write_bytes(blob[: len(blob) // 3])
+    with pytest.raises(CorruptIndexError, match="cut.npz"):
+        ClusterPruneIndex.load(cut)
+
+    # not an archive at all
+    junk = tmp_path / "junk.npz"
+    junk.write_bytes(b"this is not an npz archive")
+    with pytest.raises(CorruptIndexError, match="not a readable"):
+        ClusterPruneIndex.load(junk)
+
+    # a missing file is a missing file, not corruption
+    with pytest.raises(FileNotFoundError):
+        ClusterPruneIndex.load(tmp_path / "absent.npz")
+
+
+def test_load_missing_and_mismatched_members_raise_typed(
+    tmp_path, random_corpus
+):
+    idx = _built_index(random_corpus)
+    good = tmp_path / "good.npz"
+    idx.save(good)
+    with np.load(good, allow_pickle=False) as z:
+        members = {k: z[k] for k in z.files}
+
+    # a member dropped entirely: the error names it
+    partial = dict(members)
+    del partial["docs"]
+    p1 = tmp_path / "missing.npz"
+    np.savez_compressed(p1, **partial)
+    with pytest.raises(CorruptIndexError, match="'docs'"):
+        ClusterPruneIndex.load(p1)
+
+    # internally inconsistent members (partial overwrite): dims vs docs
+    bad = dict(members)
+    bad["dims"] = np.asarray([1, 1, 1], np.int64)
+    p2 = tmp_path / "mismatch.npz"
+    np.savez_compressed(p2, **bad)
+    with pytest.raises(CorruptIndexError, match="internally inconsistent"):
+        ClusterPruneIndex.load(p2)
+
+    # invalid calibration JSON in the ladder slot
+    bad2 = dict(members)
+    bad2["ladder"] = np.str_('{"probes": "what"}')
+    p3 = tmp_path / "badladder.npz"
+    np.savez_compressed(p3, **bad2)
+    with pytest.raises(CorruptIndexError, match="ladder"):
+        ClusterPruneIndex.load(p3)

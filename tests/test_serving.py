@@ -164,6 +164,32 @@ def test_priority_shedding_under_full_queue():
         strict.admit(q2, ticket(priority=9, seq=1))
 
 
+def test_expired_waiter_releases_queue_slot():
+    """A ticket whose deadline passes WHILE QUEUED must free its
+    max_queue_depth slot at admission time: the newcomer takes the dead
+    ticket's place instead of being shed/rejected (regression — expired
+    waiters used to hold their slot until the serving loop's next sweep)."""
+    expired_seen = []
+    sched = Scheduler(max_queue_depth=2, shed_low_priority=True,
+                      on_expired=expired_seen.append)
+    q = ShapeQueue(SHAPE)
+    dead = ticket(t=0.0, deadline=1.0, seq=0)
+    live = ticket(t=0.0, deadline=50.0, seq=1)
+    assert sched.admit(q, dead) is None and sched.admit(q, live) is None
+
+    # queue full, but one waiter is already past its deadline at admit time
+    newcomer = ticket(t=2.0, deadline=None, seq=2)
+    assert sched.admit(q, newcomer) is None       # admitted, nothing shed
+    assert list(q) == [live, newcomer]
+    assert isinstance(dead.future.exception, DeadlineExceeded)
+    assert expired_seen == [dead]                 # reported like sweep expiry
+
+    # with no expired waiter the full queue still sheds/rejects as before
+    extra = ticket(t=3.0, priority=0, seq=3)
+    with pytest.raises(Overloaded):
+        sched.admit(q, extra)
+
+
 def test_stats_aggregation():
     s = ServerStats()
     for _ in range(3):
